@@ -1,0 +1,50 @@
+//! Model co-location (§VI-C): four models share one NPU; compare
+//! LazyBatching against graph batching on the mixed request stream.
+//!
+//! ```text
+//! cargo run --release --example colocate [-- --rate 400]
+//! ```
+
+use lazybatching::exp;
+use lazybatching::model::Workload;
+use lazybatching::util::cli::Args;
+use lazybatching::util::table::{f3, ratio, Table};
+use lazybatching::{MS, SEC};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let rate = args.get_f64("rate", 400.0)?;
+    let runs = args.get_usize("runs", 5)?;
+    let sla = args.get_u64("sla", 100)? * MS;
+    let models = [
+        Workload::ResNet,
+        Workload::MobileNet,
+        Workload::Transformer,
+        Workload::Bert,
+    ];
+    println!(
+        "co-location: {:?} sharing one NPU @ {rate} req/s aggregate\n",
+        models.map(|w| w.name())
+    );
+
+    let lazy = exp::run_colocated(&models, true, rate, SEC, runs, 0xC0C0, sla, 35);
+    let gb = exp::run_colocated(&models, false, rate, SEC, runs, 0xC0C0, sla, 35);
+
+    let mut t = Table::new(vec!["policy", "lat_ms", "p99_ms", "tput", "viol"]);
+    for (name, agg) in [("ColocGraphB(35)", &gb), ("ColocLazy", &lazy)] {
+        t.row(vec![
+            name.to_string(),
+            f3(agg.mean_latency_ms()),
+            f3(agg.p99_ms()),
+            f3(agg.mean_throughput()),
+            f3(agg.violation_rate(sla)),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nLazyB improvement: latency {}, throughput {}",
+        ratio(gb.mean_latency_ms() / lazy.mean_latency_ms().max(1e-9)),
+        ratio(lazy.mean_throughput() / gb.mean_throughput().max(1e-9)),
+    );
+    Ok(())
+}

@@ -1,0 +1,79 @@
+//! Quickstart: compare every batching policy on one workload.
+//!
+//! ```text
+//! cargo run --release --example quickstart [-- --workload resnet --rate 250]
+//! ```
+//!
+//! Runs the cycle-level NPU simulation (no artifacts needed) and prints
+//! the paper's four design points side by side.
+
+use lazybatching::exp::{self, ExpConfig, PolicyCfg};
+use lazybatching::model::Workload;
+use lazybatching::util::cli::Args;
+use lazybatching::util::table::{f3, Table};
+use lazybatching::{MS, SEC};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let workload = Workload::from_name(args.get_or("workload", "transformer"))
+        .ok_or_else(|| anyhow::anyhow!("unknown workload"))?;
+    let rate = args.get_f64("rate", 250.0)?;
+    let sla = args.get_u64("sla", 100)? * MS;
+
+    println!(
+        "LazyBatching quickstart — {} @ {rate} req/s, SLA {} ms\n",
+        workload.name(),
+        sla / MS
+    );
+
+    let base = ExpConfig {
+        workload,
+        rate,
+        sla,
+        duration: 2 * SEC,
+        runs: 5,
+        ..ExpConfig::default()
+    };
+
+    let mut policies = vec![PolicyCfg::Serial];
+    for w in exp::GRAPHB_WINDOWS_MS {
+        policies.push(PolicyCfg::GraphB(w));
+    }
+    policies.push(PolicyCfg::Lazy);
+    policies.push(PolicyCfg::Oracle);
+
+    let mut t = Table::new(vec![
+        "policy",
+        "mean lat (ms)",
+        "p99 (ms)",
+        "tput (req/s)",
+        "SLA viol",
+    ]);
+    let mut lazy_lat = 0.0;
+    let mut best_gb_lat = f64::INFINITY;
+    for p in policies {
+        let agg = exp::run(&ExpConfig {
+            policy: p,
+            ..base.clone()
+        });
+        if p == PolicyCfg::Lazy {
+            lazy_lat = agg.mean_latency_ms();
+        }
+        if matches!(p, PolicyCfg::GraphB(_)) {
+            best_gb_lat = best_gb_lat.min(agg.mean_latency_ms());
+        }
+        t.row(vec![
+            p.name(),
+            f3(agg.mean_latency_ms()),
+            f3(agg.p99_ms()),
+            f3(agg.mean_throughput()),
+            f3(agg.violation_rate(sla)),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nLazyB vs best GraphB latency: {}",
+        lazybatching::util::table::ratio(best_gb_lat / lazy_lat.max(1e-9))
+    );
+    Ok(())
+}

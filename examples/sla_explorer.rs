@@ -1,0 +1,54 @@
+//! SLA explorer (mini Fig. 15): violation rate vs deadline under high
+//! load for each policy.
+//!
+//! ```text
+//! cargo run --release --example sla_explorer [-- --workload transformer]
+//! ```
+
+use lazybatching::exp::{self, ExpConfig, PolicyCfg};
+use lazybatching::model::Workload;
+use lazybatching::util::cli::Args;
+use lazybatching::util::table::{f3, Table};
+use lazybatching::{MS, SEC};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let workload = Workload::from_name(args.get_or("workload", "transformer"))
+        .ok_or_else(|| anyhow::anyhow!("unknown workload"))?;
+    let rate = args.get_f64("rate", 1000.0)?;
+    let runs = args.get_usize("runs", 3)?;
+
+    println!(
+        "SLA violation rate vs deadline — {} @ {rate} req/s\n",
+        workload.name()
+    );
+    let deadlines = [20u64, 40, 60, 80, 100];
+    let mut t = Table::new(vec![
+        "policy", "20ms", "40ms", "60ms", "80ms", "100ms",
+    ]);
+    for p in [
+        PolicyCfg::Serial,
+        PolicyCfg::GraphB(5),
+        PolicyCfg::GraphB(35),
+        PolicyCfg::Lazy,
+        PolicyCfg::Oracle,
+    ] {
+        let mut cells = vec![p.name()];
+        for &d in &deadlines {
+            // LazyB's predictor is deadline-aware: rerun per deadline
+            let agg = exp::run(&ExpConfig {
+                workload,
+                policy: p,
+                rate,
+                sla: d * MS,
+                duration: SEC,
+                runs,
+                ..ExpConfig::default()
+            });
+            cells.push(f3(agg.violation_rate(d * MS)));
+        }
+        t.row(cells);
+    }
+    t.print();
+    Ok(())
+}

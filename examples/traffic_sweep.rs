@@ -1,0 +1,55 @@
+//! Traffic sweep (mini Fig. 12/13): latency + throughput vs arrival rate
+//! for every policy on a chosen workload.
+//!
+//! ```text
+//! cargo run --release --example traffic_sweep [-- --workload gnmt --runs 5]
+//! ```
+
+use lazybatching::exp::{self, ExpConfig, PolicyCfg};
+use lazybatching::model::Workload;
+use lazybatching::traffic::PoissonArrivals;
+use lazybatching::util::cli::Args;
+use lazybatching::util::table::{f3, Table};
+use lazybatching::{MS, SEC};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let workload = Workload::from_name(args.get_or("workload", "gnmt"))
+        .ok_or_else(|| anyhow::anyhow!("unknown workload"))?;
+    let runs = args.get_usize("runs", 5)?;
+    let rates = args.get_f64_list("rates", &[16.0, 128.0, 512.0, 1000.0, 2000.0])?;
+
+    println!("traffic sweep — {} ({runs} runs/point)\n", workload.name());
+    let mut t = Table::new(vec!["rate", "band", "policy", "lat_ms", "tput", "viol"]);
+    for &rate in &rates {
+        let base = ExpConfig {
+            workload,
+            rate,
+            duration: SEC,
+            runs,
+            ..ExpConfig::default()
+        };
+        for p in [
+            PolicyCfg::Serial,
+            PolicyCfg::GraphB(5),
+            PolicyCfg::GraphB(95),
+            PolicyCfg::Lazy,
+            PolicyCfg::Oracle,
+        ] {
+            let agg = exp::run(&ExpConfig {
+                policy: p,
+                ..base.clone()
+            });
+            t.row(vec![
+                format!("{rate}"),
+                PoissonArrivals::band(rate).to_string(),
+                p.name(),
+                f3(agg.mean_latency_ms()),
+                f3(agg.mean_throughput()),
+                f3(agg.violation_rate(100 * MS)),
+            ]);
+        }
+    }
+    t.print();
+    Ok(())
+}

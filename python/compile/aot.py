@@ -1,0 +1,129 @@
+"""AOT lowering: every (node, batch size) pair -> one HLO-text artifact.
+
+Build-time only; the rust runtime (`rust/src/runtime/`) loads these files
+via `HloModuleProto::from_text_file` and never touches Python again.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the `xla`
+crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Outputs under ``artifacts/minifmr/``:
+
+  manifest.txt        line-based description the rust side parses
+  n<idx>_<name>_b<B>.hlo.txt   one executable per (node, batch)
+  golden.txt          a fixed token input + full-graph logits, for the
+                      rust end-to-end numerics test
+
+Model parameters are baked into the HLO as constants (closure capture),
+so each executable is a pure activations->activations function.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import DEFAULT_CONFIG, forward, init_params, node_fns
+
+BATCH_SIZES = (1, 2, 4, 8)
+MODEL_NAME = "minifmr"
+GOLDEN_SEED = 7
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser).
+
+    ``print_large_constants=True`` is essential: the model parameters are
+    baked into the modules as constants, and the default printer elides
+    anything big as ``constant({...})`` — which the text parser would
+    happily read back as zeros.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_node(fn, example) -> str:
+    return to_hlo_text(jax.jit(fn).lower(example))
+
+
+def golden_tokens(cfg, batch: int = 2):
+    key = jax.random.PRNGKey(GOLDEN_SEED)
+    return jax.random.randint(key, (batch, cfg.seq), 0, cfg.vocab, jnp.int32)
+
+
+def build(out_dir: str, *, use_pallas: bool = True, batches=BATCH_SIZES) -> None:
+    cfg = DEFAULT_CONFIG
+    params = init_params(cfg)
+    fns = node_fns(params, cfg, use_pallas=use_pallas)
+    os.makedirs(out_dir, exist_ok=True)
+
+    files = []
+    for idx, (name, fn) in enumerate(fns):
+        for b in batches:
+            if idx == 0:
+                example = jax.ShapeDtypeStruct((b, cfg.seq), jnp.int32)
+            elif name == "head":
+                example = jax.ShapeDtypeStruct((b, cfg.seq, cfg.d_model), jnp.float32)
+            else:
+                example = jax.ShapeDtypeStruct((b, cfg.seq, cfg.d_model), jnp.float32)
+            text = lower_node(fn, example)
+            fname = f"n{idx}_{name}_b{b}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            files.append((idx, name, b, fname))
+            print(f"  lowered node {idx} ({name}) batch {b}: {len(text)} chars")
+
+    # golden end-to-end vector for the rust integration test
+    toks = golden_tokens(cfg)
+    logits = forward(params, cfg, toks, use_pallas=use_pallas)
+    with open(os.path.join(out_dir, "golden.txt"), "w") as f:
+        f.write(f"batch {toks.shape[0]}\n")
+        f.write("tokens " + " ".join(str(int(t)) for t in toks.reshape(-1)) + "\n")
+        f.write(
+            "logits " + " ".join(f"{float(v):.6e}" for v in logits.reshape(-1)) + "\n"
+        )
+
+    # manifest: simple line format the rust side parses without serde
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write(f"model {MODEL_NAME}\n")
+        f.write(f"seq {cfg.seq}\n")
+        f.write(f"dmodel {cfg.d_model}\n")
+        f.write(f"vocab {cfg.vocab}\n")
+        f.write("batches " + " ".join(str(b) for b in batches) + "\n")
+        f.write(f"nodes {len(fns)}\n")
+        for idx, (name, _fn) in enumerate(fns):
+            in_kind = "tokens" if idx == 0 else "act"
+            out_kind = "logits" if name == "head" else "act"
+            f.write(f"node {idx} {name} {in_kind} {out_kind}\n")
+        for idx, name, b, fname in files:
+            f.write(f"file {idx} {b} {fname}\n")
+    print(f"wrote manifest + {len(files)} artifacts + golden to {out_dir}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=f"../artifacts/{MODEL_NAME}")
+    ap.add_argument(
+        "--no-pallas",
+        action="store_true",
+        help="lower with the pure-jnp reference instead of the Pallas kernels",
+    )
+    ap.add_argument(
+        "--batches",
+        default=",".join(str(b) for b in BATCH_SIZES),
+        help="comma-separated batch sizes to lower",
+    )
+    args = ap.parse_args()
+    batches = tuple(int(b) for b in args.batches.split(","))
+    build(args.out, use_pallas=not args.no_pallas, batches=batches)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Layer-1 Pallas kernels (build-time only).
+
+The serving model's compute hot-spots as Pallas kernels, lowered with
+``interpret=True`` (the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU behaviour is estimated structurally — see
+DESIGN.md §Perf). Correctness is pinned against the pure-jnp oracles in
+:mod:`compile.kernels.ref` by ``python/tests/test_kernels.py``.
+"""
+
+from .attention import fused_attention
+from .matmul import tiled_matmul
+
+__all__ = ["fused_attention", "tiled_matmul"]

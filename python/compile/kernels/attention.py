@@ -1,0 +1,66 @@
+"""Fused scaled-dot-product attention as a Pallas kernel.
+
+One grid step processes one (batch, head) slice entirely in VMEM-sized
+blocks: the ``[seq, head_dim]`` Q/K/V tiles and the ``[seq, seq]`` score
+tile. For the serving model (seq=16, head_dim=32, f32) a block is
+16·32·4·3 + 16·16·4 = 7.2 KiB — far inside the 8 MB activation budget of
+the Table-I NPU, and the two matmuls are MXU-shaped (contraction over
+head_dim / seq).
+
+TPU adaptation note (DESIGN.md §Hardware-Adaptation): a CUDA flash-
+attention kernel tiles over *threadblocks* with shared-memory staging;
+here the same insight (never materialize the full score matrix in HBM)
+is expressed through the BlockSpec HBM↔VMEM schedule — each (batch,
+head) program instance streams its Q/K/V block in, computes scores +
+softmax + weighted sum entirely on-chip, and writes only the output
+block back.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, o_ref):
+    """Kernel body for one (batch·head) slice: ``[seq, head_dim]`` blocks."""
+    q = q_ref[...]
+    k = k_ref[...]
+    v = v_ref[...]
+    d = q.shape[-1]
+    scores = jnp.dot(q, k.T) / jnp.sqrt(jnp.asarray(d, dtype=q.dtype))
+    # numerically-stable softmax, all in registers/VMEM
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[...] = jnp.dot(p, v)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def fused_attention(q, k, v):
+    """Scaled dot-product attention via Pallas.
+
+    Args:
+      q, k, v: ``[batch, heads, seq, head_dim]`` float arrays.
+
+    Returns:
+      Attention output of the same shape.
+    """
+    b, h, s, d = q.shape
+    assert k.shape == (b, h, s, d) and v.shape == (b, h, s, d)
+
+    grid = (b * h,)
+    spec = pl.BlockSpec((None, s, d), lambda i: (i, 0, 0))
+    qf = q.reshape(b * h, s, d)
+    kf = k.reshape(b * h, s, d)
+    vf = v.reshape(b * h, s, d)
+    out = pl.pallas_call(
+        _attention_kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, d)

@@ -1,0 +1,66 @@
+"""Tiled matmul as a Pallas kernel (the FFN hot path).
+
+Classic MXU tiling: the output ``[m, n]`` is cut into ``bm×bn`` tiles;
+each grid step owns one tile, loops over the contraction in ``bk``
+chunks, and accumulates in a VMEM scratch block. Tile sizes default to
+the 128×128 systolic-array shape of the Table-I NPU (clamped for small
+operands). VMEM per step = ``bm·bk + bk·bn + bm·bn`` floats — with the
+128 defaults that is 192 KiB, well inside the 8 MB budget.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """One (i, j, k) grid step: accumulate x_tile @ w_tile into the output
+    block (the grid revisits the same output tile across the k dimension —
+    the canonical Pallas accumulation pattern)."""
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...], preferred_element_type=o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def tiled_matmul(x, w, *, bm: int = 128, bn: int = 128, bk: int = 128):
+    """``x @ w`` with MXU-shaped tiling.
+
+    Args:
+      x: ``[m, k]`` float array.
+      w: ``[k, n]`` float array.
+      bm/bn/bk: tile sizes (clamped to the operand dims).
+
+    Returns:
+      ``[m, n]`` product, same dtype as ``x``.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch: {k} vs {k2}"
+    bm = min(bm, m)
+    bn = min(bn, n)
+    bk = min(bk, k)
+    # grid must cover the operands exactly; pad when not divisible
+    pm, pn, pk = (-m) % bm, (-n) % bn, (-k) % bk
+    xp = jnp.pad(x, ((0, pm), (0, pk))) if (pm or pk) else x
+    wp = jnp.pad(w, ((0, pk), (0, pn))) if (pk or pn) else w
+    gm, gn, gk = xp.shape[0] // bm, wp.shape[1] // bn, xp.shape[1] // bk
+
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], wp.shape[1]), x.dtype),
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n]

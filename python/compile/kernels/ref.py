@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the ground truth the kernels must match (``pytest`` asserts
+allclose across shape/dtype sweeps). They are also used by the L2 model
+tests to validate node composition.
+"""
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v):
+    """Scaled dot-product attention.
+
+    Args:
+      q, k, v: ``[..., seq, head_dim]`` (any leading batch/head dims).
+
+    Returns:
+      ``softmax(q kᵀ / sqrt(d)) v`` with the same shape as ``q``.
+    """
+    d = q.shape[-1]
+    scores = jnp.einsum("...qd,...kd->...qk", q, k) / jnp.sqrt(
+        jnp.asarray(d, dtype=q.dtype)
+    )
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("...qk,...kd->...qd", probs, v)
+
+
+def matmul_ref(x, w):
+    """Plain ``x @ w`` for 2-D operands."""
+    return jnp.dot(x, w)

@@ -1,0 +1,152 @@
+"""Layer-2: the serving model as per-node JAX functions.
+
+A byte-level mini-Transformer classifier ("minifmr") used by the real
+PJRT execution path: the rust coordinator loads each *node* (layer) as a
+separate AOT-compiled executable and schedules node-by-node, exactly the
+execution model LazyBatching builds on (Fig. 1: graph lowered to
+node-wise execution).
+
+Nodes (activations are ``f32[batch, seq, d_model]`` between nodes):
+
+  0  embed        i32[b, seq]            -> f32[b, seq, d]
+  1  block0_attn  LN -> MHA (Pallas fused_attention) -> +residual
+  2  block0_ffn   LN -> FFN (Pallas tiled_matmul)    -> +residual
+  3  block1_attn  (same as 1, separate weights)
+  4  block1_ffn
+  5  head         LN -> mean-pool -> logits f32[b, vocab]
+
+Parameters are generated from a fixed seed and baked into the HLO as
+constants by ``aot.py`` — the rust side only ever feeds activations.
+"""
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fused_attention, tiled_matmul
+from .kernels import ref as kref
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 256
+    seq: int = 16
+    d_model: int = 128
+    n_heads: int = 4
+    ffn: int = 512
+    blocks: int = 2
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+DEFAULT_CONFIG = ModelConfig()
+PARAM_SEED = 20200417  # fixed: artifacts must be reproducible
+
+
+def init_params(cfg: ModelConfig = DEFAULT_CONFIG, seed: int = PARAM_SEED):
+    """Deterministic random parameters (dict of jnp arrays)."""
+    key = jax.random.PRNGKey(seed)
+    keys = iter(jax.random.split(key, 64))
+    d, f = cfg.d_model, cfg.ffn
+
+    def dense(kin, kout):
+        return jax.random.normal(next(keys), (kin, kout), jnp.float32) / jnp.sqrt(kin)
+
+    params = {
+        "embed": jax.random.normal(next(keys), (cfg.vocab, d), jnp.float32) * 0.02,
+        "pos": jax.random.normal(next(keys), (cfg.seq, d), jnp.float32) * 0.02,
+        "head_w": dense(d, cfg.vocab),
+        "head_ln": (jnp.ones((d,)), jnp.zeros((d,))),
+    }
+    for b in range(cfg.blocks):
+        params[f"b{b}"] = {
+            "ln1": (jnp.ones((d,)), jnp.zeros((d,))),
+            "wqkv": dense(d, 3 * d),
+            "wo": dense(d, d),
+            "ln2": (jnp.ones((d,)), jnp.zeros((d,))),
+            "w1": dense(d, f),
+            "w2": dense(f, d),
+        }
+    return params
+
+
+def _layernorm(x, scale_bias):
+    scale, bias = scale_bias
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-5) * scale + bias
+
+
+def embed_node(params, cfg, tokens):
+    """Node 0: token + positional embedding."""
+    x = params["embed"][tokens]  # [b, seq, d]
+    return x + params["pos"][None, :, :]
+
+
+def attn_node(params, cfg: ModelConfig, block: int, x, *, use_pallas: bool = True):
+    """Attention node: LN -> MHA -> residual. Hot path is the L1 kernel."""
+    p = params[f"b{block}"]
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    y = _layernorm(x, p["ln1"])
+    qkv = y @ p["wqkv"]  # [b, s, 3d]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    to_heads = lambda t: t.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    q, k, v = to_heads(q), to_heads(k), to_heads(v)
+    att = fused_attention(q, k, v) if use_pallas else kref.attention_ref(q, k, v)
+    att = att.transpose(0, 2, 1, 3).reshape(b, s, d)
+    return x + att @ p["wo"]
+
+
+def ffn_node(params, cfg: ModelConfig, block: int, x, *, use_pallas: bool = True):
+    """FFN node: LN -> GeLU MLP -> residual. Matmuls via the L1 kernel."""
+    p = params[f"b{block}"]
+    b, s, d = x.shape
+    y = _layernorm(x, p["ln2"]).reshape(b * s, d)
+    mm = tiled_matmul if use_pallas else kref.matmul_ref
+    hdn = jax.nn.gelu(mm(y, p["w1"]))
+    out = mm(hdn, p["w2"]).reshape(b, s, d)
+    return x + out
+
+
+def head_node(params, cfg: ModelConfig, x):
+    """Node 5: LN -> mean-pool over seq -> vocab logits."""
+    y = _layernorm(x, params["head_ln"])
+    pooled = y.mean(axis=1)  # [b, d]
+    return pooled @ params["head_w"]
+
+
+def node_fns(params, cfg: ModelConfig = DEFAULT_CONFIG, *, use_pallas: bool = True):
+    """The graph as an ordered list of ``(name, fn)`` node functions.
+
+    Node 0 takes ``i32[b, seq]`` tokens; the rest take/return activations.
+    """
+    fns = [("embed", functools.partial(embed_node, params, cfg))]
+    for b in range(cfg.blocks):
+        fns.append(
+            (
+                f"block{b}_attn",
+                functools.partial(attn_node, params, cfg, b, use_pallas=use_pallas),
+            )
+        )
+        fns.append(
+            (
+                f"block{b}_ffn",
+                functools.partial(ffn_node, params, cfg, b, use_pallas=use_pallas),
+            )
+        )
+    fns.append(("head", functools.partial(head_node, params, cfg)))
+    return fns
+
+
+def forward(params, cfg: ModelConfig, tokens, *, use_pallas: bool = True):
+    """Full-graph reference: compose every node (ground truth for tests
+    and for the rust end-to-end numerics check)."""
+    x = None
+    for name, fn in node_fns(params, cfg, use_pallas=use_pallas):
+        x = fn(tokens) if name == "embed" else fn(x)
+    return x

@@ -1,0 +1,118 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+This is the core correctness signal for the kernel layer — hypothesis
+sweeps shapes and dtypes, asserting allclose against ``kernels/ref.py``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fused_attention, tiled_matmul
+from compile.kernels.ref import attention_ref, matmul_ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------- attention
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    h=st.integers(1, 4),
+    s=st.sampled_from([1, 2, 8, 16, 17]),
+    d=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_matches_ref(b, h, s, d, seed):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = rand(keys[0], (b, h, s, d))
+    k = rand(keys[1], (b, h, s, d))
+    v = rand(keys[2], (b, h, s, d))
+    out = fused_attention(q, k, v)
+    ref = attention_ref(q, k, v)
+    assert out.shape == ref.shape
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+def test_attention_single_token():
+    # seq=1: softmax over one element is the identity on v
+    q = rand(jax.random.PRNGKey(0), (2, 2, 1, 8))
+    k = rand(jax.random.PRNGKey(1), (2, 2, 1, 8))
+    v = rand(jax.random.PRNGKey(2), (2, 2, 1, 8))
+    out = fused_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(v), rtol=1e-6, atol=1e-6)
+
+
+def test_attention_softmax_stability_large_logits():
+    # large-magnitude q/k would overflow a naive softmax
+    q = rand(jax.random.PRNGKey(3), (1, 1, 16, 32), scale=50.0)
+    k = rand(jax.random.PRNGKey(4), (1, 1, 16, 32), scale=50.0)
+    v = rand(jax.random.PRNGKey(5), (1, 1, 16, 32))
+    out = np.asarray(fused_attention(q, k, v))
+    assert np.isfinite(out).all()
+    ref = np.asarray(attention_ref(q, k, v))
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+
+def test_attention_permutation_equivariance_over_batch():
+    # permuting the batch dim permutes outputs — the batching invariant
+    # the serving layer relies on when it merges sub-batches.
+    keys = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = rand(keys[0], (4, 2, 16, 32))
+    k = rand(keys[1], (4, 2, 16, 32))
+    v = rand(keys[2], (4, 2, 16, 32))
+    perm = jnp.array([2, 0, 3, 1])
+    out = fused_attention(q, k, v)
+    out_p = fused_attention(q[perm], k[perm], v[perm])
+    np.testing.assert_allclose(np.asarray(out[perm]), np.asarray(out_p), rtol=1e-5, atol=1e-6)
+
+
+# ------------------------------------------------------------------ matmul
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.sampled_from([1, 3, 16, 100, 128, 130]),
+    k=st.sampled_from([1, 8, 64, 128, 200]),
+    n=st.sampled_from([1, 5, 32, 128, 160]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 2)
+    x = rand(keys[0], (m, k))
+    w = rand(keys[1], (k, n))
+    out = tiled_matmul(x, w)
+    ref = matmul_ref(x, w)
+    assert out.shape == (m, n)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(8, 8, 8), (32, 16, 64), (128, 128, 128)])
+def test_matmul_tile_size_invariance(bm, bn, bk):
+    # result must not depend on tiling
+    x = rand(jax.random.PRNGKey(11), (65, 96))
+    w = rand(jax.random.PRNGKey(12), (96, 70))
+    out = tiled_matmul(x, w, bm=bm, bn=bn, bk=bk)
+    ref = matmul_ref(x, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_identity():
+    x = rand(jax.random.PRNGKey(13), (17, 33))
+    eye = jnp.eye(33, dtype=jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(tiled_matmul(x, eye)), np.asarray(x), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_matmul_shape_mismatch_raises():
+    x = jnp.zeros((4, 5))
+    w = jnp.zeros((6, 7))
+    with pytest.raises(AssertionError):
+        tiled_matmul(x, w)

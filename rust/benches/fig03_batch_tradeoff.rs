@@ -1,0 +1,40 @@
+//! **E1 / Fig. 3** — effect of batching on throughput and latency for
+//! ResNet with pre-formed batches ("we assume that the batched inputs are
+//! already formed at size N, without waiting for them to be collected").
+//!
+//! Paper shape to match: throughput rises steeply with batch size and
+//! levels out beyond ~16; Latency(all) grows with batch while
+//! Latency(avg) = Latency(all)/N falls and then flattens.
+
+use lazybatching::exp::{make_table, DeviceKind};
+use lazybatching::model::Workload;
+use lazybatching::util::table::{f3, Table};
+use lazybatching::MS;
+
+fn main() {
+    println!("Fig 3 — batching throughput/latency tradeoff (pre-formed batches, ResNet)");
+    let table = make_table(Workload::ResNet, DeviceKind::Npu, 64);
+    let mut t = Table::new(vec![
+        "batch",
+        "Latency(all) ms",
+        "Latency(avg) ms",
+        "throughput (img/s)",
+        "tput vs b=1",
+    ]);
+    let t1 = table.exec_time_at_batch(1, 1, 1) as f64;
+    for b in [1usize, 2, 4, 8, 16, 32, 64] {
+        let all_ns = table.exec_time_at_batch(b, 1, 1) as f64;
+        let all_ms = all_ns / MS as f64;
+        let avg_ms = all_ms / b as f64;
+        let tput = b as f64 / (all_ns / 1e9);
+        t.row(vec![
+            format!("{b}"),
+            f3(all_ms),
+            f3(avg_ms),
+            f3(tput),
+            f3(tput / (1.0 / (t1 / 1e9))),
+        ]);
+    }
+    t.print();
+    println!("\npaper: throughput saturates beyond batch ~16 (\"practically meaningless\n       for the ML inference server to batch inputs beyond 16 for ResNet\")");
+}

@@ -1,0 +1,59 @@
+//! **E2 / Fig. 5** — effect of the batching time-window (5..99 ms) on
+//! graph batching's maximally-formed batch size and average latency per
+//! input, across low/medium/high traffic (16/250/2000 req/s).
+//!
+//! Paper shape: under low traffic a larger window only adds latency (no
+//! batch-size gain); under heavy traffic larger windows form much larger
+//! batches and start paying off.
+
+use lazybatching::exp::{self, ExpConfig, PolicyCfg};
+use lazybatching::model::Workload;
+use lazybatching::util::table::{f3, Table};
+
+fn main() {
+    println!("Fig 5 — GraphB batching time-window sensitivity (ResNet)");
+    let runs = exp::bench_runs();
+    let mut t = Table::new(vec![
+        "traffic", "rate", "BTW(ms)", "max batch", "avg lat/input (ms)",
+    ]);
+    for (band, rate) in [("low", 16.0), ("medium", 250.0), ("high", 2000.0)] {
+        for btw in [5u64, 35, 65, 99] {
+            let cfg = ExpConfig {
+                workload: Workload::ResNet,
+                policy: PolicyCfg::GraphB(btw),
+                rate,
+                duration: exp::bench_duration(),
+                runs,
+                ..ExpConfig::default()
+            };
+            let agg = exp::run(&cfg);
+            let max_batch = max_formed_batch(&cfg);
+            t.row(vec![
+                band.to_string(),
+                format!("{rate}"),
+                format!("{btw}"),
+                format!("{max_batch}"),
+                f3(agg.mean_latency_ms()),
+            ]);
+        }
+    }
+    t.print();
+    println!("\npaper: low traffic — larger BTW no batch-size gain, only latency harm;\n       high traffic — large BTW forms large batches and recovers latency");
+}
+
+/// Replay one trace through GraphB and track the largest formed batch.
+fn max_formed_batch(cfg: &ExpConfig) -> usize {
+    use lazybatching::coordinator::GraphBatching;
+    use lazybatching::sim::{SimConfig, SimEngine};
+    use lazybatching::traffic::Trace;
+    let table = exp::make_table(cfg.workload, cfg.device, cfg.max_batch);
+    let trace = Trace::generate(&table.graph, cfg.rate, cfg.duration, cfg.seed);
+    let btw = match cfg.policy {
+        PolicyCfg::GraphB(w) => w,
+        _ => unreachable!(),
+    };
+    let mut policy = GraphBatching::new(table.graph.clone(), btw * lazybatching::MS, cfg.max_batch);
+    let engine = SimEngine::single(table, SimConfig::default());
+    let r = engine.run(&trace, &mut policy);
+    r.stats.max_batch_formed as usize
+}

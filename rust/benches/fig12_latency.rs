@@ -1,0 +1,65 @@
+//! **E4 / Fig. 12** — average latency per query-arrival rate for
+//! Serial / GraphB(5,35,65,95) / LazyB / Oracle on the three main
+//! workloads, with p25/p75 error bars across runs.
+//!
+//! Paper shape: GraphB worst at low load (needless stalling); LazyB lowest
+//! at every rate, 5.3×/2.7×/2.5× better than the best GraphB for
+//! ResNet/GNMT/Transformer.
+
+use lazybatching::exp::{self, ExpConfig, PolicyCfg};
+use lazybatching::model::Workload;
+use lazybatching::util::stats::geomean;
+use lazybatching::util::table::{f3, ratio, Table};
+
+fn main() {
+    println!("Fig 12 — average latency vs arrival rate (p25..p75 across runs)");
+    let runs = exp::bench_runs();
+    let rates = [16.0, 128.0, 512.0, 1000.0, 2000.0];
+    for w in Workload::MAIN {
+        println!("\n--- {} ---", w.name());
+        let mut t = Table::new(vec!["rate", "policy", "lat_ms", "p25", "p75"]);
+        let mut improvements = Vec::new();
+        for &rate in &rates {
+            let base = ExpConfig {
+                workload: w,
+                rate,
+                duration: exp::bench_duration(),
+                runs,
+                ..ExpConfig::default()
+            };
+            let mut lazy_lat = 0.0;
+            let mut best_gb = f64::INFINITY;
+            let mut policies = vec![PolicyCfg::Serial];
+            policies.extend(exp::GRAPHB_WINDOWS_MS.map(PolicyCfg::GraphB));
+            policies.push(PolicyCfg::Lazy);
+            policies.push(PolicyCfg::Oracle);
+            for p in policies {
+                let agg = exp::run(&ExpConfig {
+                    policy: p,
+                    ..base.clone()
+                });
+                let (lo, hi) = agg.latency_p25_p75();
+                if p == PolicyCfg::Lazy {
+                    lazy_lat = agg.mean_latency_ms();
+                }
+                if matches!(p, PolicyCfg::GraphB(_)) {
+                    best_gb = best_gb.min(agg.mean_latency_ms());
+                }
+                t.row(vec![
+                    format!("{rate}"),
+                    p.name(),
+                    f3(agg.mean_latency_ms()),
+                    f3(lo),
+                    f3(hi),
+                ]);
+            }
+            improvements.push(best_gb / lazy_lat.max(1e-9));
+        }
+        t.print();
+        println!(
+            "LazyB vs best GraphB latency (geomean over rates): {}",
+            ratio(geomean(&improvements))
+        );
+    }
+    println!("\npaper: 5.3x / 2.7x / 2.5x for resnet / gnmt / transformer");
+}

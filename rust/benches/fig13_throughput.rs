@@ -1,0 +1,63 @@
+//! **E5 / Fig. 13** — throughput per query-arrival rate, same policy grid
+//! as Fig. 12.
+//!
+//! Paper shape: LazyB matches or beats the best throughput-optimized
+//! GraphB (1.1×/1.3×/1.2× for ResNet/GNMT/Transformer).
+
+use lazybatching::exp::{self, ExpConfig, PolicyCfg};
+use lazybatching::model::Workload;
+use lazybatching::util::stats::geomean;
+use lazybatching::util::table::{f3, ratio, Table};
+
+fn main() {
+    println!("Fig 13 — throughput vs arrival rate");
+    let runs = exp::bench_runs();
+    let rates = [16.0, 128.0, 512.0, 1000.0, 2000.0];
+    for w in Workload::MAIN {
+        println!("\n--- {} ---", w.name());
+        let mut t = Table::new(vec!["rate", "policy", "tput", "p25", "p75"]);
+        let mut improvements = Vec::new();
+        for &rate in &rates {
+            let base = ExpConfig {
+                workload: w,
+                rate,
+                duration: exp::bench_duration(),
+                runs,
+                ..ExpConfig::default()
+            };
+            let mut lazy_tput = 0.0;
+            let mut best_gb: f64 = 0.0;
+            let mut policies = vec![PolicyCfg::Serial];
+            policies.extend(exp::GRAPHB_WINDOWS_MS.map(PolicyCfg::GraphB));
+            policies.push(PolicyCfg::Lazy);
+            policies.push(PolicyCfg::Oracle);
+            for p in policies {
+                let agg = exp::run(&ExpConfig {
+                    policy: p,
+                    ..base.clone()
+                });
+                let (lo, hi) = agg.throughput_p25_p75();
+                if p == PolicyCfg::Lazy {
+                    lazy_tput = agg.mean_throughput();
+                }
+                if matches!(p, PolicyCfg::GraphB(_)) {
+                    best_gb = best_gb.max(agg.mean_throughput());
+                }
+                t.row(vec![
+                    format!("{rate}"),
+                    p.name(),
+                    f3(agg.mean_throughput()),
+                    f3(lo),
+                    f3(hi),
+                ]);
+            }
+            improvements.push(lazy_tput / best_gb.max(1e-9));
+        }
+        t.print();
+        println!(
+            "LazyB vs best GraphB throughput (geomean over rates): {}",
+            ratio(geomean(&improvements))
+        );
+    }
+    println!("\npaper: 1.1x / 1.3x / 1.2x for resnet / gnmt / transformer");
+}

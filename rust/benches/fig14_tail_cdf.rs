@@ -1,0 +1,43 @@
+//! **E6 / Fig. 14** — CDF of end-to-end inference latency under high load
+//! (1K req/s): LazyB vs the best-performing GraphB, highlighting p99 tail.
+//!
+//! Paper shape: LazyB's p99 far below GraphB's (e.g. 54 vs 123 ms for
+//! Transformer).
+
+use lazybatching::exp::{self, best_graphb, ExpConfig, PolicyCfg};
+use lazybatching::model::Workload;
+use lazybatching::util::table::{f3, Table};
+
+fn main() {
+    println!("Fig 14 — latency CDF @ 1K req/s (LazyB vs best GraphB)");
+    let runs = exp::bench_runs();
+    let thresholds: Vec<f64> = (0..=15).map(|i| i as f64 * 10.0).collect();
+    for w in Workload::MAIN {
+        let base = ExpConfig {
+            workload: w,
+            rate: 1000.0,
+            duration: exp::bench_duration(),
+            runs,
+            ..ExpConfig::default()
+        };
+        let lazy = exp::run(&ExpConfig {
+            policy: PolicyCfg::Lazy,
+            ..base.clone()
+        });
+        let (bw, gb) = best_graphb(&base);
+        println!("\n--- {} (best GraphB window: {bw} ms) ---", w.name());
+        let lazy_cdf = lazy.cdf(&thresholds);
+        let gb_cdf = gb.cdf(&thresholds);
+        let mut t = Table::new(vec!["lat<=ms", "LazyB CDF", "GraphB CDF"]);
+        for (i, &th) in thresholds.iter().enumerate() {
+            t.row(vec![format!("{th}"), f3(lazy_cdf[i]), f3(gb_cdf[i])]);
+        }
+        t.print();
+        println!(
+            "p99: LazyB {} ms vs GraphB({bw}) {} ms",
+            f3(lazy.p99_ms()),
+            f3(gb.p99_ms())
+        );
+    }
+    println!("\npaper: LazyB p99 consistently much smaller (54 vs 123 ms for transformer)");
+}

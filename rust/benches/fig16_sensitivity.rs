@@ -1,0 +1,103 @@
+//! **E8 / Fig. 16** — robustness across the sensitivity workloads
+//! (VGGNet, MobileNet, LAS, BERT): (a) latency at 16 and 1000 req/s,
+//! (b) throughput at the same points, (c) average SLA violation rate over
+//! deadlines 20..100 ms at 1000 req/s.
+//!
+//! Paper shape: 1.5× / 1.3× / 2.9× average improvement in latency /
+//! throughput / SLA satisfaction over the best GraphB.
+
+use lazybatching::exp::{self, best_graphb, ExpConfig, PolicyCfg};
+use lazybatching::model::Workload;
+use lazybatching::util::stats::{geomean, mean};
+use lazybatching::util::table::{f3, ratio, Table};
+use lazybatching::MS;
+
+fn main() {
+    println!("Fig 16 — sensitivity workloads (VN, MN, LAS, BERT)");
+    let runs = exp::bench_runs();
+    let mut lat_ratios = Vec::new();
+    let mut tput_ratios = Vec::new();
+    let mut sla_ratios = Vec::new();
+    let mut t = Table::new(vec![
+        "workload",
+        "load",
+        "LazyB lat",
+        "bestGB lat",
+        "LazyB tput",
+        "bestGB tput",
+    ]);
+    for w in Workload::SENSITIVITY {
+        for rate in [16.0, 1000.0] {
+            let base = ExpConfig {
+                workload: w,
+                rate,
+                duration: exp::bench_duration(),
+                runs,
+                ..ExpConfig::default()
+            };
+            let lazy = exp::run(&ExpConfig {
+                policy: PolicyCfg::Lazy,
+                ..base.clone()
+            });
+            let (_bw, gb) = best_graphb(&base);
+            lat_ratios.push(gb.mean_latency_ms() / lazy.mean_latency_ms().max(1e-9));
+            tput_ratios.push(lazy.mean_throughput() / gb.mean_throughput().max(1e-9));
+            t.row(vec![
+                w.name().to_string(),
+                format!("{rate}"),
+                f3(lazy.mean_latency_ms()),
+                f3(gb.mean_latency_ms()),
+                f3(lazy.mean_throughput()),
+                f3(gb.mean_throughput()),
+            ]);
+        }
+    }
+    t.print();
+
+    // (c) SLA violation, averaged over deadlines 20..100 ms @ 1000 req/s
+    println!("\n(c) average SLA violation rate over deadlines 20..100 ms @ 1000 req/s");
+    let mut t2 = Table::new(vec!["workload", "LazyB", "best GraphB", "Serial"]);
+    for w in Workload::SENSITIVITY {
+        let deadlines = [20u64, 40, 60, 80, 100];
+        let avg_viol = |p: PolicyCfg| -> f64 {
+            mean(
+                &deadlines
+                    .iter()
+                    .map(|&d| {
+                        exp::run(&ExpConfig {
+                            workload: w,
+                            policy: p,
+                            rate: 1000.0,
+                            sla: d * MS,
+                            duration: exp::bench_duration(),
+                            runs,
+                            ..ExpConfig::default()
+                        })
+                        .violation_rate(d * MS)
+                    })
+                    .collect::<Vec<_>>(),
+            )
+        };
+        let lazy_v = avg_viol(PolicyCfg::Lazy);
+        let gb_v = exp::GRAPHB_WINDOWS_MS
+            .iter()
+            .map(|&wnd| avg_viol(PolicyCfg::GraphB(wnd)))
+            .fold(f64::INFINITY, f64::min);
+        let serial_v = avg_viol(PolicyCfg::Serial);
+        sla_ratios.push((gb_v.max(1e-3)) / (lazy_v.max(1e-3)));
+        t2.row(vec![
+            w.name().to_string(),
+            f3(lazy_v),
+            f3(gb_v),
+            f3(serial_v),
+        ]);
+    }
+    t2.print();
+    println!(
+        "\naverage improvement: latency {}, throughput {}, SLA satisfaction {}",
+        ratio(geomean(&lat_ratios)),
+        ratio(geomean(&tput_ratios)),
+        ratio(geomean(&sla_ratios)),
+    );
+    println!("paper: 1.5x latency, 1.3x throughput, 2.9x SLA satisfaction");
+}

@@ -1,0 +1,107 @@
+//! **E14 / §VI-D implementation overhead** — the scheduler's own costs:
+//! O(1) BatchTable operations, slack-prediction cost per decision, and
+//! end-to-end simulated node-events/second (the L3 hot path for §Perf).
+//!
+//! Paper: "the scheduling computational complexity is O(1) and is thus
+//! negligible".
+
+use lazybatching::coordinator::batch_table::{BatchTable, Entry};
+use lazybatching::coordinator::{Reqs, SlackMode, SlackPredictor};
+use lazybatching::exp::{self, ExpConfig, PolicyCfg};
+use lazybatching::model::Workload;
+use lazybatching::traffic::RequestSpec;
+use lazybatching::util::table::{f3, Table};
+use lazybatching::MS;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() {
+    println!("§VI-D — scheduler overhead & simulator hot path");
+    let mut t = Table::new(vec!["operation", "cost", "unit"]);
+
+    // BatchTable push+merge+retire microbench
+    {
+        let iters = 1_000_000u64;
+        let start = Instant::now();
+        let mut bt = BatchTable::new();
+        for i in 0..iters {
+            bt.push(Entry {
+                reqs: vec![i],
+                tpos: 0,
+            });
+            bt.merge_top(64);
+            if bt.top().map(|e| e.reqs.len()).unwrap_or(0) >= 64 {
+                let ids = bt.top().unwrap().reqs.clone();
+                bt.retire_top(&ids, &[]);
+            }
+        }
+        let ns = start.elapsed().as_nanos() as f64 / iters as f64;
+        t.row(vec![
+            "BatchTable push+merge".to_string(),
+            f3(ns),
+            "ns/op".to_string(),
+        ]);
+    }
+
+    // slack prediction per admission decision
+    {
+        let table = exp::make_table(Workload::Gnmt, exp::DeviceKind::Npu, 64);
+        let pred = SlackPredictor::new(table, 100 * MS, 32, SlackMode::Conservative);
+        let mut reqs = Reqs::default();
+        for i in 0..64u64 {
+            reqs.insert(RequestSpec {
+                id: i,
+                arrival: 0,
+                in_len: 18,
+                out_len: 17,
+                model_idx: 0,
+            });
+        }
+        let mut bt = BatchTable::new();
+        bt.push(Entry {
+            reqs: (0..32).collect(),
+            tpos: 1,
+        });
+        let cand: Vec<u64> = (32..48).collect();
+        let iters = 100_000;
+        let start = Instant::now();
+        let mut acc = 0i64;
+        for _ in 0..iters {
+            acc = acc.wrapping_add(pred.min_slack_if_admitted(MS, &reqs, &bt, &cand));
+        }
+        std::hint::black_box(acc);
+        let ns = start.elapsed().as_nanos() as f64 / iters as f64;
+        t.row(vec![
+            "slack prediction (32 in-flight + 16 cand)".to_string(),
+            f3(ns),
+            "ns/decision".to_string(),
+        ]);
+    }
+
+    // end-to-end simulator throughput (node events per second)
+    {
+        let cfg = ExpConfig {
+            workload: Workload::Transformer,
+            policy: PolicyCfg::Lazy,
+            rate: 1000.0,
+            duration: lazybatching::SEC,
+            runs: 1,
+            ..ExpConfig::default()
+        };
+        let table = exp::make_table(cfg.workload, cfg.device, cfg.max_batch);
+        let start = Instant::now();
+        let r = exp::run_once(&cfg, table, 1);
+        let wall = start.elapsed().as_secs_f64();
+        t.row(vec![
+            "sim node-events/s (transformer @1K)".to_string(),
+            f3(r.node_execs as f64 / wall),
+            "events/s".to_string(),
+        ]);
+        t.row(vec![
+            "sim wall-clock per simulated second".to_string(),
+            f3(wall * 1e3),
+            "ms".to_string(),
+        ]);
+    }
+    t.print();
+}

@@ -1,0 +1,74 @@
+//! **Ablation** — admission-rule variants for LazyBatching (DESIGN.md
+//! "BatchTable invariants / admission" design choice):
+//!
+//! * `Eq2` (paper): every involved request's conservative slack must stay
+//!   non-negative — doomed requests veto preemption, protecting batch
+//!   integrity under overload.
+//! * `NoFlip`: only requests that can still meet their SLA veto — more
+//!   eager merging, more preemption churn.
+//!
+//! This quantifies why the stricter Eq-2 veto is the right default.
+
+use std::sync::Arc;
+
+use lazybatching::coordinator::lazy::AdmissionRule;
+use lazybatching::coordinator::{LazyBatching, SlackMode};
+use lazybatching::exp::{self, DeviceKind};
+use lazybatching::metrics::Aggregate;
+use lazybatching::model::Workload;
+use lazybatching::sim::{RunResult, SimConfig, SimEngine};
+use lazybatching::traffic::Trace;
+use lazybatching::util::table::{f3, Table};
+use lazybatching::MS;
+
+fn run_rule(w: Workload, rate: f64, rule: AdmissionRule, runs: usize) -> Aggregate {
+    let table = exp::make_table(w, DeviceKind::Npu, 64);
+    let cap = table.max_batch.min(table.saturation_batch(0.02));
+    let results: Vec<RunResult> = (0..runs)
+        .map(|i| {
+            let trace = Trace::generate(
+                &table.graph,
+                rate,
+                exp::bench_duration(),
+                0xAB1A + i as u64 * 7919,
+            );
+            let engine = SimEngine::single(table.clone(), SimConfig::default());
+            let mut p = LazyBatching::new(
+                Arc::clone(&table),
+                100 * MS,
+                32,
+                SlackMode::Conservative,
+                cap,
+            )
+            .with_admission(rule);
+            engine.run(&trace, &mut p)
+        })
+        .collect();
+    Aggregate::from_runs(&results)
+}
+
+fn main() {
+    println!("ablation — LazyB admission rule: Eq2 (paper) vs NoFlip (eager)");
+    let runs = exp::bench_runs();
+    let mut t = Table::new(vec![
+        "workload", "rate", "rule", "lat_ms", "p99_ms", "tput", "viol@100ms",
+    ]);
+    for w in [Workload::Gnmt, Workload::Transformer, Workload::ResNet] {
+        for rate in [250.0, 1000.0, 2000.0] {
+            for (name, rule) in [("Eq2", AdmissionRule::Eq2), ("NoFlip", AdmissionRule::NoFlip)] {
+                let agg = run_rule(w, rate, rule, runs);
+                t.row(vec![
+                    w.name().to_string(),
+                    format!("{rate}"),
+                    name.to_string(),
+                    f3(agg.mean_latency_ms()),
+                    f3(agg.p99_ms()),
+                    f3(agg.mean_throughput()),
+                    f3(agg.violation_rate(100 * MS)),
+                ]);
+            }
+        }
+    }
+    t.print();
+    println!("\nexpected: comparable at low/medium load; NoFlip degrades at overload\n(preemption churn against doomed in-flight batches)");
+}

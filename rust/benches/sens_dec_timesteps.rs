@@ -1,0 +1,49 @@
+//! **E12 / §VI-C "Estimated unrolled sequence length"** — sensitivity of
+//! LazyBatching to the `dec_timesteps` bound (Algorithm 1) on Transformer
+//! at 1K req/s, SLA 60 ms.
+//!
+//! Paper: dec_timesteps=32 (N=90% coverage) ⇒ zero violations at 60 ms;
+//! dec_timesteps=10 (N=16%) ⇒ ~36% violations; robust as long as the
+//! bound is large enough to overprovision.
+
+use lazybatching::exp::{self, ExpConfig, PolicyCfg};
+use lazybatching::model::Workload;
+use lazybatching::traffic::{LangPair, SeqLenDist};
+use lazybatching::util::table::{f3, Table};
+use lazybatching::MS;
+
+fn main() {
+    println!("§VI-C — LazyB sensitivity to dec_timesteps (SLA-critical: GNMT @ 1K req/s, 40 ms; paper studies Transformer @ 60 ms)");
+    let runs = exp::bench_runs();
+    let dist = SeqLenDist::wmt2019(LangPair::EnDe, 80);
+    let mut t = Table::new(vec![
+        "dec_timesteps",
+        "~coverage",
+        "violation rate",
+        "mean lat (ms)",
+        "tput",
+    ]);
+    for dec in [6usize, 10, 16, 24, 32, 48] {
+        // invert: what coverage does this bound correspond to?
+        let coverage = dist.cdf(dec as f64 / 0.95); // fertility-adjusted
+        let agg = exp::run(&ExpConfig {
+            workload: Workload::Gnmt,
+            policy: PolicyCfg::Lazy,
+            rate: 1000.0,
+            sla: 40 * MS,
+            dec_timesteps: dec,
+            duration: exp::bench_duration(),
+            runs,
+            ..ExpConfig::default()
+        });
+        t.row(vec![
+            format!("{dec}"),
+            format!("{:.0}%", coverage * 100.0),
+            f3(agg.violation_rate(40 * MS)),
+            f3(agg.mean_latency_ms()),
+            f3(agg.mean_throughput()),
+        ]);
+    }
+    t.print();
+    println!("\npaper: zero violations at dec_timesteps=32; ~36% at 10 (Transformer @60ms).\nnote:  this implementation is additionally guarded by the stack-empty\n       bulk drain and the catch-up cost/benefit gate, so an optimistic\n       bound degrades violations far less than in the paper (see\n       EXPERIMENTS.md E12).");
+}

@@ -1,0 +1,58 @@
+//! **E11 / §VI-C "Model-allowed maximum batch size"** — GraphB's maximum
+//! batch size swept over {16, 32, 64}; LazyB unchanged.
+//!
+//! Paper: with max batch 16/32, LazyB achieves 12×/14× latency reduction
+//! and 1.3×/1.3× throughput improvement (vs 15×/1.5× at 64).
+
+use lazybatching::exp::{self, ExpConfig, PolicyCfg};
+use lazybatching::model::Workload;
+use lazybatching::util::stats::geomean;
+use lazybatching::util::table::{f3, ratio, Table};
+
+fn main() {
+    println!("§VI-C — sensitivity to GraphB's model-allowed maximum batch size");
+    let runs = exp::bench_runs();
+    let rates = [16.0, 512.0, 1000.0];
+    let mut t = Table::new(vec!["max_batch", "lat improvement", "tput improvement"]);
+    for max_batch in [16usize, 32, 64] {
+        let mut lat_r = Vec::new();
+        let mut tput_r = Vec::new();
+        for w in Workload::MAIN {
+            for &rate in &rates {
+                let base = ExpConfig {
+                    workload: w,
+                    rate,
+                    duration: exp::bench_duration(),
+                    runs,
+                    max_batch,
+                    ..ExpConfig::default()
+                };
+                let lazy = exp::run(&ExpConfig {
+                    policy: PolicyCfg::Lazy,
+                    ..base.clone()
+                });
+                // best graph batching under this max batch
+                let mut best_lat = f64::INFINITY;
+                let mut best_tput: f64 = 0.0;
+                for wnd in exp::GRAPHB_WINDOWS_MS {
+                    let gb = exp::run(&ExpConfig {
+                        policy: PolicyCfg::GraphB(wnd),
+                        ..base.clone()
+                    });
+                    best_lat = best_lat.min(gb.mean_latency_ms());
+                    best_tput = best_tput.max(gb.mean_throughput());
+                }
+                lat_r.push(best_lat / lazy.mean_latency_ms().max(1e-9));
+                tput_r.push(lazy.mean_throughput() / best_tput.max(1e-9));
+            }
+        }
+        t.row(vec![
+            format!("{max_batch}"),
+            ratio(geomean(&lat_r)),
+            ratio(geomean(&tput_r)),
+        ]);
+        let _ = f3(0.0);
+    }
+    t.print();
+    println!("\npaper: 12x/14x latency and 1.3x/1.3x throughput at max batch 16/32");
+}

@@ -1,0 +1,64 @@
+//! **E10 / Table II** — single-batch inference latency of the main
+//! workloads on the Table-I NPU (calibration check for the cost model).
+//!
+//! Paper: ResNet 1.1 ms, GNMT 7.2 ms, Transformer 2.4 ms.
+
+use lazybatching::exp::{make_table, DeviceKind};
+use lazybatching::model::{Workload, WMT_MEAN_IN, WMT_MEAN_OUT};
+use lazybatching::util::table::{f3, Table};
+use lazybatching::MS;
+
+fn main() {
+    println!("Table II — single-batch latency (b=1, WMT mean sentence lengths)");
+    let paper = [
+        (Workload::ResNet, 1.1),
+        (Workload::Gnmt, 7.2),
+        (Workload::Transformer, 2.4),
+    ];
+    let mut t = Table::new(vec![
+        "workload",
+        "algorithm",
+        "measured (ms)",
+        "paper (ms)",
+        "delta",
+    ]);
+    for (w, paper_ms) in paper {
+        let table = make_table(w, DeviceKind::Npu, 64);
+        let (i, o) = if table.graph.is_dynamic() {
+            (WMT_MEAN_IN, WMT_MEAN_OUT)
+        } else {
+            (1, 1)
+        };
+        let ms = table.true_exec_time(i, o) as f64 / MS as f64;
+        let kind = match w {
+            Workload::ResNet => "CNN",
+            Workload::Gnmt => "RNN",
+            _ => "Attentions",
+        };
+        t.row(vec![
+            w.name().to_string(),
+            kind.to_string(),
+            f3(ms),
+            f3(paper_ms),
+            format!("{:+.0}%", (ms / paper_ms - 1.0) * 100.0),
+        ]);
+    }
+    t.print();
+
+    // extended: the sensitivity zoo too (no paper reference values)
+    println!("\nsensitivity workloads (no paper reference):");
+    let mut t2 = Table::new(vec!["workload", "measured (ms)"]);
+    for w in Workload::SENSITIVITY {
+        let table = make_table(w, DeviceKind::Npu, 64);
+        let (i, o) = if table.graph.is_dynamic() {
+            (WMT_MEAN_IN, WMT_MEAN_OUT)
+        } else {
+            (1, 1)
+        };
+        t2.row(vec![
+            w.name().to_string(),
+            f3(table.true_exec_time(i, o) as f64 / MS as f64),
+        ]);
+    }
+    t2.print();
+}

@@ -1,0 +1,387 @@
+//! The stack-based batch status table (§IV-B, Fig. 10).
+//!
+//! Each entry is a *sub-batch*: a set of requests that execute together,
+//! tagged with the template node they will execute next. The top of the
+//! stack is the **active batch**. Preempting the active batch pushes a new
+//! entry (the preempting inputs, starting at node 0); when the two topmost
+//! entries reach a common node they are merged into a single sub-batch.
+//!
+//! Invariants (checked in debug builds and by the property tests):
+//!
+//! * `tpos` is non-decreasing from the top of the stack to the bottom —
+//!   newer (preempting) entries are never ahead of the entries they
+//!   preempted. (Adjacent *equal* positions are merge candidates; they
+//!   persist only when the model-allowed max batch size blocks the merge.)
+//! * no request appears in more than one entry;
+//! * entries are never empty.
+//!
+//! All operations are O(1) in the number of stack entries touched — the
+//! paper's §VI-D "the scheduling computational complexity is O(1)".
+
+use super::policy::ReqId;
+
+/// One sub-batch: requests co-scheduled at the same template position.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Entry {
+    pub reqs: Vec<ReqId>,
+    /// Next template node this sub-batch will execute.
+    pub tpos: usize,
+}
+
+/// The BatchTable. `stack.last()` is the top (= active batch).
+#[derive(Debug, Clone, Default)]
+pub struct BatchTable {
+    stack: Vec<Entry>,
+}
+
+impl BatchTable {
+    pub fn new() -> BatchTable {
+        BatchTable { stack: Vec::new() }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.stack.is_empty()
+    }
+
+    pub fn depth(&self) -> usize {
+        self.stack.len()
+    }
+
+    /// Total requests tracked across all entries.
+    pub fn total_reqs(&self) -> usize {
+        self.stack.iter().map(|e| e.reqs.len()).sum()
+    }
+
+    /// The active batch (top of stack).
+    pub fn top(&self) -> Option<&Entry> {
+        self.stack.last()
+    }
+
+    /// Iterate entries from top (active) to bottom (furthest ahead).
+    pub fn iter_top_down(&self) -> impl Iterator<Item = &Entry> {
+        self.stack.iter().rev()
+    }
+
+    /// Push a new active sub-batch (preempting the current top). The new
+    /// entry must be at or before the current top's position — a
+    /// preempting batch starts earlier in the graph.
+    pub fn push(&mut self, entry: Entry) {
+        assert!(!entry.reqs.is_empty(), "sub-batch must be non-empty");
+        if let Some(top) = self.stack.last() {
+            assert!(
+                entry.tpos <= top.tpos,
+                "preempting entry must not be ahead of the preempted one \
+                 (new tpos {} > top tpos {})",
+                entry.tpos,
+                top.tpos
+            );
+        }
+        self.stack.push(entry);
+        self.debug_check();
+    }
+
+    /// Fig. 10's merge: if the two topmost entries share a node id and the
+    /// combined size does not exceed `max_batch`, merge them. Repeats
+    /// until no further merge applies. Returns how many merges happened.
+    pub fn merge_top(&mut self, max_batch: usize) -> u64 {
+        let mut merges = 0;
+        while self.stack.len() >= 2 {
+            let n = self.stack.len();
+            let (below, top) = (&self.stack[n - 2], &self.stack[n - 1]);
+            if below.tpos == top.tpos && below.reqs.len() + top.reqs.len() <= max_batch {
+                let top = self.stack.pop().unwrap();
+                self.stack.last_mut().unwrap().reqs.extend(top.reqs);
+                merges += 1;
+            } else {
+                break;
+            }
+        }
+        self.debug_check();
+        merges
+    }
+
+    /// Positional fast path of [`BatchTable::retire_top`]: `disp[i]`
+    /// describes member `i` of the top entry (same order the policy
+    /// issued, which is the order of `top().reqs`). Avoids the O(n²)
+    /// membership filters on the scheduler hot path.
+    pub fn retire_top_by(&mut self, disp: &[crate::coordinator::Transition]) {
+        use crate::coordinator::Transition as T;
+        let top = self.stack.pop().expect("retire_top_by on empty BatchTable");
+        assert_eq!(top.reqs.len(), disp.len());
+        let mut repeating = Vec::new();
+        let mut advanced = Vec::new();
+        for (&id, d) in top.reqs.iter().zip(disp) {
+            match d {
+                T::Repeat => repeating.push(id),
+                T::Advanced => advanced.push(id),
+                T::Finished => {}
+                T::Masked => unreachable!("BatchTable entries are never padded"),
+            }
+        }
+        if !advanced.is_empty() {
+            let adv = Entry {
+                reqs: advanced,
+                tpos: top.tpos + 1,
+            };
+            let mut j = self.stack.len();
+            while j > 0 && self.stack[j - 1].tpos < adv.tpos {
+                j -= 1;
+            }
+            self.stack.insert(j, adv);
+        }
+        if !repeating.is_empty() {
+            self.stack.push(Entry {
+                reqs: repeating,
+                tpos: top.tpos,
+            });
+        }
+        self.debug_check();
+    }
+
+    /// Apply the outcome of executing the top entry's node:
+    ///
+    /// * `finished` members left the server (released or held elsewhere),
+    /// * `advanced` members moved to `tpos + 1`,
+    /// * the rest are still repeating the same node.
+    ///
+    /// When both groups survive, the advanced group is inserted *below*
+    /// the top (it is further ahead in the graph); the repeating group
+    /// stays on top and remains active — matching the paper's rule that
+    /// the scheduler keeps driving the latest (least-progressed) batch
+    /// until it catches up.
+    pub fn retire_top(
+        &mut self,
+        finished: &[ReqId],
+        advanced: &[ReqId],
+    ) {
+        let top = self.stack.pop().expect("retire_top on empty BatchTable");
+        let is_in = |set: &[ReqId], id: ReqId| set.contains(&id);
+        let repeating: Vec<ReqId> = top
+            .reqs
+            .iter()
+            .copied()
+            .filter(|&r| !is_in(finished, r) && !is_in(advanced, r))
+            .collect();
+        let advanced_reqs: Vec<ReqId> = top
+            .reqs
+            .iter()
+            .copied()
+            .filter(|&r| is_in(advanced, r))
+            .collect();
+
+        if !advanced_reqs.is_empty() {
+            // Insert at sorted position: normally this is the top, but when
+            // a same-node merge below was blocked by the max batch size the
+            // advanced group has *overtaken* that entry and must sit beneath
+            // it to preserve the stack order (the blocked entry then becomes
+            // active and the two leapfrog down the graph).
+            let adv = Entry {
+                reqs: advanced_reqs,
+                tpos: top.tpos + 1,
+            };
+            let mut j = self.stack.len();
+            while j > 0 && self.stack[j - 1].tpos < adv.tpos {
+                j -= 1;
+            }
+            self.stack.insert(j, adv);
+        }
+        if !repeating.is_empty() {
+            self.stack.push(Entry {
+                reqs: repeating,
+                tpos: top.tpos,
+            });
+        }
+        self.debug_check();
+    }
+
+    /// Remove a request wherever it is (used by co-location wrappers and
+    /// failure injection tests). Drops the entry if it becomes empty.
+    pub fn remove_req(&mut self, id: ReqId) -> bool {
+        for i in 0..self.stack.len() {
+            if let Some(pos) = self.stack[i].reqs.iter().position(|&r| r == id) {
+                self.stack[i].reqs.swap_remove(pos);
+                if self.stack[i].reqs.is_empty() {
+                    self.stack.remove(i);
+                }
+                self.debug_check();
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Debug-build invariant check: strictly increasing `tpos` top→bottom,
+    /// no duplicates, no empty entries.
+    pub fn debug_check(&self) {
+        #[cfg(debug_assertions)]
+        {
+            self.check().unwrap();
+        }
+    }
+
+    /// Full invariant check (also used by property tests in release).
+    pub fn check(&self) -> Result<(), String> {
+        let mut seen = std::collections::HashSet::new();
+        for e in &self.stack {
+            if e.reqs.is_empty() {
+                return Err("empty sub-batch entry".into());
+            }
+            for &r in &e.reqs {
+                if !seen.insert(r) {
+                    return Err(format!("request {r} in multiple entries"));
+                }
+            }
+        }
+        for w in self.stack.windows(2) {
+            if w[0].tpos < w[1].tpos {
+                return Err(format!(
+                    "stack order violated: below tpos {} < above tpos {}",
+                    w[0].tpos, w[1].tpos
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(reqs: &[ReqId], tpos: usize) -> Entry {
+        Entry {
+            reqs: reqs.to_vec(),
+            tpos,
+        }
+    }
+
+    #[test]
+    fn fig10_scenario() {
+        // Reproduce the paper's Fig. 10 BatchTable walk-through.
+        let mut bt = BatchTable::new();
+        // t=2: Req1 pushed at node A(0)
+        bt.push(entry(&[1], 0));
+        // Req1 executes A, advances to B(1)
+        bt.retire_top(&[], &[1]);
+        assert_eq!(bt.top().unwrap().tpos, 1);
+        // Req1 executes B; scheduler bumps it to C(2) and preempts with Req2 at A(0)
+        bt.retire_top(&[], &[1]);
+        bt.push(entry(&[2], 0));
+        assert_eq!(bt.depth(), 2);
+        // t=5: Req2 finishes A -> B(1); Req3 arrives, pushed at A(0)
+        bt.retire_top(&[], &[2]);
+        bt.push(entry(&[3], 0));
+        // t=6: Req3 finishes A -> B(1): top two both at B -> merge
+        bt.retire_top(&[], &[3]);
+        assert_eq!(bt.merge_top(64), 1);
+        assert_eq!(bt.depth(), 2);
+        assert_eq!(bt.top().unwrap().reqs, vec![2, 3]);
+        assert_eq!(bt.top().unwrap().tpos, 1);
+        // t=7: Req2-3 execute B -> C(2): merge with Req1 at C
+        bt.retire_top(&[], &[2, 3]);
+        assert_eq!(bt.merge_top(64), 1);
+        assert_eq!(bt.depth(), 1);
+        let top = bt.top().unwrap();
+        assert_eq!(top.tpos, 2);
+        assert_eq!(top.reqs.len(), 3);
+        assert_eq!(bt.total_reqs(), 3);
+    }
+
+    #[test]
+    fn merge_respects_max_batch() {
+        let mut bt = BatchTable::new();
+        bt.push(entry(&[1, 2, 3], 2));
+        bt.push(entry(&[4, 5], 1));
+        bt.retire_top(&[], &[4, 5]); // 4,5 advance to tpos 2
+        assert_eq!(bt.merge_top(4), 0); // 3 + 2 > 4 — no merge
+        assert_eq!(bt.depth(), 2);
+        assert_eq!(bt.merge_top(5), 1);
+        assert_eq!(bt.depth(), 1);
+    }
+
+    #[test]
+    fn split_on_divergent_progress() {
+        // sub-batch at an unrolled node: one member exhausts its repeats
+        // and advances, the other keeps repeating.
+        let mut bt = BatchTable::new();
+        bt.push(entry(&[7, 8], 3));
+        bt.retire_top(&[], &[8]); // 8 advances, 7 repeats
+        assert_eq!(bt.depth(), 2);
+        assert_eq!(bt.top().unwrap().reqs, vec![7]); // repeating stays active
+        assert_eq!(bt.top().unwrap().tpos, 3);
+        let below: Vec<_> = bt.iter_top_down().skip(1).collect();
+        assert_eq!(below[0].reqs, vec![8]);
+        assert_eq!(below[0].tpos, 4);
+    }
+
+    #[test]
+    fn finished_members_leave() {
+        let mut bt = BatchTable::new();
+        bt.push(entry(&[1, 2, 3], 5));
+        bt.retire_top(&[2], &[1, 3]);
+        assert_eq!(bt.depth(), 1);
+        assert_eq!(bt.top().unwrap().reqs, vec![1, 3]);
+        assert_eq!(bt.top().unwrap().tpos, 6);
+        // everyone finishing empties the table
+        bt.retire_top(&[1, 3], &[]);
+        assert!(bt.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "must not be ahead")]
+    fn push_ahead_of_top_panics() {
+        let mut bt = BatchTable::new();
+        bt.push(entry(&[1], 2));
+        bt.push(entry(&[2], 5)); // new entry deeper in the graph: illegal
+    }
+
+    #[test]
+    fn remove_req_drops_empty_entries() {
+        let mut bt = BatchTable::new();
+        bt.push(entry(&[1, 2], 4));
+        bt.push(entry(&[3], 1));
+        assert!(bt.remove_req(3));
+        assert_eq!(bt.depth(), 1);
+        assert!(!bt.remove_req(3));
+        assert!(bt.remove_req(1));
+        assert_eq!(bt.total_reqs(), 1);
+    }
+
+    #[test]
+    fn blocked_merge_overtake_keeps_order() {
+        // A full entry at node 5 blocks the merge; the small active entry
+        // catches up to 5, cannot merge, executes node 5 and advances to 6.
+        // It must slot BELOW the full entry, which then becomes active.
+        let mut bt = BatchTable::new();
+        let full: Vec<ReqId> = (0..64).collect();
+        bt.push(entry(&full, 5));
+        bt.push(entry(&[100], 5));
+        assert_eq!(bt.merge_top(64), 0, "65 > max_batch: merge must fail");
+        // active (top) is the small entry; it advances past node 5
+        assert_eq!(bt.top().unwrap().reqs, vec![100]);
+        bt.retire_top(&[], &[100]);
+        assert!(bt.check().is_ok());
+        assert_eq!(bt.top().unwrap().reqs.len(), 64, "full entry resumes");
+        assert_eq!(bt.top().unwrap().tpos, 5);
+        let bottom: Vec<_> = bt.iter_top_down().last().unwrap().reqs.clone();
+        assert_eq!(bottom, vec![100]);
+        // the full entry advances to 6: now both at 6 -> still unmergeable
+        bt.retire_top(&[], &full);
+        assert!(bt.check().is_ok());
+        assert_eq!(bt.merge_top(64), 0);
+        assert_eq!(bt.merge_top(65), 1, "with capacity they merge at node 6");
+    }
+
+    #[test]
+    fn invariant_checker_catches_violations() {
+        let mut bt = BatchTable::new();
+        bt.push(entry(&[1], 3));
+        bt.push(entry(&[2], 1));
+        assert!(bt.check().is_ok());
+        // hand-craft a violation through the public-but-raw path
+        let bad = BatchTable {
+            stack: vec![entry(&[1], 1), entry(&[1], 2)],
+        };
+        assert!(bad.check().is_err()); // duplicate + order
+    }
+}

@@ -1,0 +1,456 @@
+//! Model co-location (§VI-C "LazyBatching for co-located ML model
+//! inference", methodology of Choi et al. \[14\] / PREMA).
+//!
+//! Several models share one NPU. Batches never span models; the paper's
+//! rule is: "whenever a new request is received, our scheduler examines
+//! whether lazily batching this request will violate the SLA of the
+//! currently on-going requests of co-located ML models".
+//!
+//! * [`ColocLazy`] — one BatchTable + slack predictor per model; admission
+//!   considers every in-flight request of *every* model; the processor
+//!   runs the top entry of the model holding the most SLA-urgent request
+//!   (least-slack-first across models).
+//! * [`ColocGraphB`] — baseline: an independent graph-batching queue per
+//!   model, formed batches served FIFO by readiness time, each executing
+//!   its padded graph uninterrupted.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use super::batch_table::{BatchTable, Entry};
+use super::policy::{
+    Action, Batcher, Completion, Exec, PolicyStats, ReqId, Reqs, Transition,
+};
+use super::slack::{SlackMode, SlackPredictor};
+use crate::model::graph::Cursor;
+use crate::model::LatencyTable;
+use crate::Nanos;
+
+/// LazyBatching across co-located models.
+pub struct ColocLazy {
+    predictors: Vec<SlackPredictor>,
+    bts: Vec<BatchTable>,
+    pending: Vec<VecDeque<ReqId>>,
+    max_batch: usize,
+    sla_target: Nanos,
+    stats: PolicyStats,
+}
+
+impl ColocLazy {
+    pub fn new(
+        tables: Vec<Arc<LatencyTable>>,
+        sla_target: Nanos,
+        max_batch: usize,
+    ) -> ColocLazy {
+        let predictors = tables
+            .iter()
+            .map(|t| {
+                let dec = SlackPredictor::default_dec_timesteps(t.graph.is_dynamic());
+                SlackPredictor::new(t.clone(), sla_target, dec, SlackMode::Conservative)
+            })
+            .collect::<Vec<_>>();
+        let n = predictors.len();
+        ColocLazy {
+            predictors,
+            bts: (0..n).map(|_| BatchTable::new()).collect(),
+            pending: (0..n).map(|_| VecDeque::new()).collect(),
+            max_batch,
+            sla_target,
+            stats: PolicyStats::default(),
+        }
+    }
+
+    /// Σ over every in-flight request (all models) of its conservative
+    /// single-batch remaining time, plus the candidate pendings of model
+    /// `cand_model`.
+    fn total_remaining(
+        &self,
+        reqs: &Reqs,
+        cand_model: usize,
+        cand: &[ReqId],
+    ) -> (Nanos, Vec<ReqId>) {
+        let mut total: Nanos = 0;
+        let mut involved = Vec::new();
+        for (m, bt) in self.bts.iter().enumerate() {
+            for e in bt.iter_top_down() {
+                for &id in &e.reqs {
+                    total += self.predictors[m].est_remaining(reqs, id);
+                    involved.push(id);
+                }
+            }
+        }
+        for &id in cand {
+            total += self.predictors[cand_model].est_remaining(reqs, id);
+            involved.push(id);
+        }
+        (total, involved)
+    }
+
+    fn min_slack(&self, now: Nanos, reqs: &Reqs, model: usize, cand: &[ReqId]) -> i64 {
+        let (total, involved) = self.total_remaining(reqs, model, cand);
+        involved
+            .iter()
+            .map(|&id| {
+                let elapsed = now.saturating_sub(reqs.get(id).spec.arrival);
+                self.sla_target as i64 - (elapsed as i64 + total as i64)
+            })
+            .min()
+            .unwrap_or(self.sla_target as i64)
+    }
+
+    fn nothing_in_flight(&self) -> bool {
+        self.bts.iter().all(|bt| bt.is_empty())
+    }
+
+    /// The model whose top entry holds the most urgent request
+    /// (least slack first across co-located models).
+    fn most_urgent_model(&self, now: Nanos, reqs: &Reqs) -> Option<usize> {
+        let mut best: Option<(i64, usize)> = None;
+        for (m, bt) in self.bts.iter().enumerate() {
+            let Some(top) = bt.top() else { continue };
+            let slack = top
+                .reqs
+                .iter()
+                .map(|&id| {
+                    let elapsed = now.saturating_sub(reqs.get(id).spec.arrival);
+                    let rem = self.predictors[m].est_remaining(reqs, id);
+                    self.sla_target as i64 - (elapsed as i64 + rem as i64)
+                })
+                .min()
+                .unwrap();
+            if best.map_or(true, |(s, _)| slack < s) {
+                best = Some((slack, m));
+            }
+        }
+        best.map(|(_, m)| m)
+    }
+}
+
+impl Batcher for ColocLazy {
+    fn on_arrival(&mut self, _now: Nanos, reqs: &Reqs, id: ReqId) {
+        let m = reqs.get(id).spec.model_idx;
+        self.pending[m].push_back(id);
+    }
+
+    fn on_complete(
+        &mut self,
+        _now: Nanos,
+        reqs: &Reqs,
+        completion: &Completion,
+        released: &mut Vec<ReqId>,
+    ) {
+        let m = reqs.get(completion.exec.reqs[0]).spec.model_idx;
+        let mut finished = Vec::new();
+        let mut advanced = Vec::new();
+        for (&id, &tr) in completion.exec.reqs.iter().zip(&completion.transitions) {
+            match tr {
+                Transition::Finished => finished.push(id),
+                Transition::Advanced => advanced.push(id),
+                Transition::Repeat => {}
+                Transition::Masked => unreachable!("ColocLazy never pads"),
+            }
+        }
+        self.bts[m].retire_top(&finished, &advanced);
+        released.extend_from_slice(&finished);
+    }
+
+    fn next_action(&mut self, now: Nanos, reqs: &Reqs) -> Action {
+        // merge per model
+        for bt in &mut self.bts {
+            self.stats.merges += bt.merge_top(self.max_batch);
+        }
+        // admission: walk models round-robin by oldest pending first
+        let order: Vec<usize> = {
+            let mut ms: Vec<usize> = (0..self.pending.len())
+                .filter(|&m| !self.pending[m].is_empty())
+                .collect();
+            ms.sort_by_key(|&m| reqs.get(self.pending[m][0]).spec.arrival);
+            ms
+        };
+        for m in order {
+            let cap = self.max_batch.min(self.pending[m].len());
+            let k = if self.nothing_in_flight() {
+                // drain the backlog as one batch (see LazyBatching)
+                cap
+            } else {
+                let mut k = 0;
+                let mut cand: Vec<ReqId> = Vec::with_capacity(cap);
+                for i in 0..cap {
+                    cand.push(self.pending[m][i]);
+                    if self.min_slack(now, reqs, m, &cand) >= 0 {
+                        k = i + 1;
+                    } else {
+                        break;
+                    }
+                }
+                k
+            };
+            if k > 0 {
+                if !self.bts[m].is_empty() {
+                    self.stats.preemptions += 1;
+                }
+                let ids: Vec<ReqId> = self.pending[m].drain(..k).collect();
+                self.stats.admitted += ids.len() as u64;
+                self.bts[m].push(Entry { reqs: ids, tpos: 0 });
+                self.stats.merges += self.bts[m].merge_top(self.max_batch);
+            } else {
+                self.stats.denied += 1;
+            }
+        }
+        // run the most urgent model's active batch
+        match self.most_urgent_model(now, reqs) {
+            Some(m) => {
+                let top = self.bts[m].top().unwrap();
+                self.stats.node_execs += 1;
+                Action::Execute(Exec {
+                    reqs: top.reqs.clone(),
+                    tpos: top.tpos,
+                    padded: false,
+                })
+            }
+            None => Action::Sleep { until: None },
+        }
+    }
+
+    fn stats(&self) -> PolicyStats {
+        self.stats.clone()
+    }
+
+    fn name(&self) -> String {
+        format!("ColocLazy({})", self.bts.len())
+    }
+}
+
+/// Per-model graph-batching state for the co-located baseline.
+struct ColocQueue {
+    graph: Arc<crate::model::ModelGraph>,
+    queue: VecDeque<ReqId>,
+}
+
+/// An issued padded batch.
+struct ColocActive {
+    model: usize,
+    members: Vec<ReqId>,
+    cursor: Cursor,
+    max_in: usize,
+    max_out: usize,
+}
+
+/// Graph batching across co-located models (baseline for E13).
+pub struct ColocGraphB {
+    per_model: Vec<ColocQueue>,
+    btw: Nanos,
+    max_batch: usize,
+    active: Option<ColocActive>,
+    stats: PolicyStats,
+}
+
+impl ColocGraphB {
+    pub fn new(
+        graphs: Vec<Arc<crate::model::ModelGraph>>,
+        btw: Nanos,
+        max_batch: usize,
+    ) -> ColocGraphB {
+        ColocGraphB {
+            per_model: graphs
+                .into_iter()
+                .map(|graph| ColocQueue {
+                    graph,
+                    queue: VecDeque::new(),
+                })
+                .collect(),
+            btw,
+            max_batch,
+            active: None,
+            stats: PolicyStats::default(),
+        }
+    }
+
+    /// A model is ready when its queue hits max batch or its oldest
+    /// request aged past the window. Returns readiness time.
+    fn ready_at(&self, reqs: &Reqs, m: usize, now: Nanos) -> Option<Nanos> {
+        let q = &self.per_model[m];
+        if q.queue.is_empty() {
+            return None;
+        }
+        if q.queue.len() >= self.max_batch {
+            return Some(now);
+        }
+        let deadline = reqs.get(*q.queue.front().unwrap()).spec.arrival + self.btw;
+        (now >= deadline).then_some(deadline)
+    }
+}
+
+impl Batcher for ColocGraphB {
+    fn on_arrival(&mut self, _now: Nanos, reqs: &Reqs, id: ReqId) {
+        let m = reqs.get(id).spec.model_idx;
+        self.per_model[m].queue.push_back(id);
+    }
+
+    fn on_complete(
+        &mut self,
+        _now: Nanos,
+        _reqs: &Reqs,
+        _completion: &Completion,
+        released: &mut Vec<ReqId>,
+    ) {
+        let b = self.active.as_mut().expect("completion without active");
+        let graph = self.per_model[b.model].graph.clone();
+        match b.cursor.advance(&graph, b.max_in, b.max_out) {
+            Some(c) => b.cursor = c,
+            None => {
+                released.extend_from_slice(&b.members);
+                self.active = None;
+            }
+        }
+    }
+
+    fn next_action(&mut self, now: Nanos, reqs: &Reqs) -> Action {
+        if self.active.is_none() {
+            // earliest-ready model wins the processor
+            let mut best: Option<(Nanos, usize)> = None;
+            for m in 0..self.per_model.len() {
+                if let Some(at) = self.ready_at(reqs, m, now) {
+                    if best.map_or(true, |(t, _)| at < t) {
+                        best = Some((at, m));
+                    }
+                }
+            }
+            if let Some((_, m)) = best {
+                let n = self.max_batch.min(self.per_model[m].queue.len());
+                let members: Vec<ReqId> = self.per_model[m].queue.drain(..n).collect();
+                let max_in = members.iter().map(|&id| reqs.get(id).spec.in_len).max().unwrap();
+                let max_out = members.iter().map(|&id| reqs.get(id).spec.out_len).max().unwrap();
+                self.stats.admitted += members.len() as u64;
+                self.active = Some(ColocActive {
+                    model: m,
+                    members,
+                    cursor: Cursor::START,
+                    max_in,
+                    max_out,
+                });
+            } else {
+                // sleep until the earliest window deadline
+                let until = (0..self.per_model.len())
+                    .filter_map(|m| {
+                        self.per_model[m]
+                            .queue
+                            .front()
+                            .map(|&id| reqs.get(id).spec.arrival + self.btw)
+                    })
+                    .min();
+                return Action::Sleep { until };
+            }
+        }
+        let b = self.active.as_ref().unwrap();
+        self.stats.node_execs += 1;
+        Action::Execute(Exec {
+            reqs: b.members.clone(),
+            tpos: b.cursor.tpos,
+            padded: true,
+        })
+    }
+
+    fn stats(&self) -> PolicyStats {
+        self.stats.clone()
+    }
+
+    fn name(&self) -> String {
+        format!("ColocGraphB({})", self.btw / crate::MS)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::workloads::Workload;
+    use crate::npu::systolic::SystolicModel;
+    use crate::sim::{SimConfig, SimEngine};
+    use crate::traffic::{LangPair, Trace};
+    use crate::{MS, SEC};
+
+    fn tables(ws: &[Workload]) -> Vec<Arc<LatencyTable>> {
+        ws.iter()
+            .map(|w| {
+                Arc::new(LatencyTable::profile(
+                    Arc::new(w.graph()),
+                    &SystolicModel::default_npu(),
+                    64,
+                ))
+            })
+            .collect()
+    }
+
+    #[test]
+    fn coloc_lazy_serves_four_models() {
+        let ws = [
+            Workload::ResNet,
+            Workload::MobileNet,
+            Workload::Transformer,
+            Workload::Bert,
+        ];
+        let ts = tables(&ws);
+        let graphs: Vec<&crate::model::ModelGraph> =
+            ts.iter().map(|t| t.graph.as_ref()).collect();
+        let trace = Trace::generate_multi(&graphs, 400.0, SEC, 11, LangPair::EnDe);
+        let engine = SimEngine::new(ts.clone(), SimConfig::default());
+        let mut p = ColocLazy::new(ts, 100 * MS, 64);
+        let r = engine.run(&trace, &mut p);
+        assert_eq!(r.latencies.len(), trace.requests.len());
+    }
+
+    #[test]
+    fn coloc_graphb_serves_four_models() {
+        let ws = [
+            Workload::ResNet,
+            Workload::MobileNet,
+            Workload::Transformer,
+            Workload::Bert,
+        ];
+        let ts = tables(&ws);
+        let graphs: Vec<&crate::model::ModelGraph> =
+            ts.iter().map(|t| t.graph.as_ref()).collect();
+        let trace = Trace::generate_multi(&graphs, 400.0, SEC, 11, LangPair::EnDe);
+        let engine = SimEngine::new(ts.clone(), SimConfig::default());
+        let mut p = ColocGraphB::new(
+            ts.iter().map(|t| t.graph.clone()).collect(),
+            35 * MS,
+            64,
+        );
+        let r = engine.run(&trace, &mut p);
+        assert_eq!(r.latencies.len(), trace.requests.len());
+    }
+
+    #[test]
+    fn coloc_lazy_beats_coloc_graphb_on_latency() {
+        let ws = [
+            Workload::ResNet,
+            Workload::MobileNet,
+            Workload::Transformer,
+            Workload::Bert,
+        ];
+        let ts = tables(&ws);
+        let graphs: Vec<&crate::model::ModelGraph> =
+            ts.iter().map(|t| t.graph.as_ref()).collect();
+        let trace = Trace::generate_multi(&graphs, 300.0, SEC, 13, LangPair::EnDe);
+        let engine = SimEngine::new(ts.clone(), SimConfig::default());
+        let mean = |r: &crate::sim::RunResult| {
+            r.latencies.iter().map(|&(_, l)| l as f64).sum::<f64>()
+                / r.latencies.len() as f64
+        };
+        let mut lazy = ColocLazy::new(ts.clone(), 100 * MS, 64);
+        let rl = engine.run(&trace, &mut lazy);
+        let mut gb = ColocGraphB::new(
+            ts.iter().map(|t| t.graph.clone()).collect(),
+            35 * MS,
+            64,
+        );
+        let rg = engine.run(&trace, &mut gb);
+        assert!(
+            mean(&rl) < mean(&rg),
+            "coloc lazy {:.2}ms vs graphb {:.2}ms",
+            mean(&rl) / 1e6,
+            mean(&rg) / 1e6
+        );
+    }
+}

@@ -1,0 +1,256 @@
+//! Baseline graph batching — `GraphB(N)` (§III-A, Fig. 4).
+//!
+//! TF-Serving / TensorRT-Inference-Server semantics with the paper's two
+//! hyper-parameters:
+//!
+//! * **batching time-window** (`btw`): the longest time the oldest queued
+//!   request waits for the batch to fill;
+//! * **model-allowed maximum batch size** (`max_batch`): the batch is
+//!   issued immediately once this many inputs are queued.
+//!
+//! Once issued, the batched graph executes **uninterrupted** to
+//! completion. Dynamic (seq2seq) members are padded to the longest
+//! input/output length in the batch — the whole batch advances through one
+//! shared cursor and every member's response is released when the padded
+//! graph finishes (the paper's "newly arrived requests remain idle inside
+//! the server, waiting for the current batch to finish execution").
+
+use std::collections::VecDeque;
+
+use super::policy::{
+    Action, Batcher, Completion, Exec, PolicyStats, ReqId, Reqs,
+};
+use crate::model::graph::Cursor;
+use crate::model::ModelGraph;
+use crate::Nanos;
+use std::sync::Arc;
+
+/// An issued batch executing the (padded) graph.
+#[derive(Debug, Clone)]
+struct ActiveBatch {
+    members: Vec<ReqId>,
+    cursor: Cursor,
+    /// Padded sequence lengths: max over members.
+    max_in: usize,
+    max_out: usize,
+}
+
+/// Graph batching with a batching time-window of `btw` ns.
+pub struct GraphBatching {
+    graph: Arc<ModelGraph>,
+    btw: Nanos,
+    max_batch: usize,
+    queue: VecDeque<ReqId>,
+    active: Option<ActiveBatch>,
+    stats: PolicyStats,
+}
+
+impl GraphBatching {
+    pub fn new(graph: Arc<ModelGraph>, btw: Nanos, max_batch: usize) -> GraphBatching {
+        assert!(max_batch >= 1);
+        GraphBatching {
+            graph,
+            btw,
+            max_batch,
+            queue: VecDeque::new(),
+            active: None,
+            stats: PolicyStats::default(),
+        }
+    }
+
+    fn form_batch(&mut self, reqs: &Reqs) {
+        let n = self.max_batch.min(self.queue.len());
+        let members: Vec<ReqId> = self.queue.drain(..n).collect();
+        let max_in = members
+            .iter()
+            .map(|&id| reqs.get(id).spec.in_len)
+            .max()
+            .unwrap_or(1);
+        let max_out = members
+            .iter()
+            .map(|&id| reqs.get(id).spec.out_len)
+            .max()
+            .unwrap_or(1);
+        self.stats.admitted += members.len() as u64;
+        self.stats.max_batch_formed = self.stats.max_batch_formed.max(members.len() as u64);
+        self.active = Some(ActiveBatch {
+            members,
+            cursor: Cursor::START,
+            max_in,
+            max_out,
+        });
+    }
+}
+
+impl Batcher for GraphBatching {
+    fn on_arrival(&mut self, _now: Nanos, _reqs: &Reqs, id: ReqId) {
+        self.queue.push_back(id);
+    }
+
+    fn on_complete(
+        &mut self,
+        _now: Nanos,
+        _reqs: &Reqs,
+        _completion: &Completion,
+        released: &mut Vec<ReqId>,
+    ) {
+        let batch = self.active.as_mut().expect("completion without active batch");
+        match batch
+            .cursor
+            .advance(&self.graph, batch.max_in, batch.max_out)
+        {
+            Some(c) => batch.cursor = c,
+            None => {
+                // padded graph finished: every member's response leaves now
+                released.extend_from_slice(&batch.members);
+                self.active = None;
+            }
+        }
+    }
+
+    fn next_action(&mut self, now: Nanos, reqs: &Reqs) -> Action {
+        if self.active.is_none() && !self.queue.is_empty() {
+            let oldest_arrival = reqs.get(*self.queue.front().unwrap()).spec.arrival;
+            let window_deadline = oldest_arrival + self.btw;
+            if self.queue.len() >= self.max_batch || now >= window_deadline {
+                self.form_batch(reqs);
+            } else {
+                return Action::Sleep {
+                    until: Some(window_deadline),
+                };
+            }
+        }
+        match &self.active {
+            Some(b) => {
+                self.stats.node_execs += 1;
+                Action::Execute(Exec {
+                    reqs: b.members.clone(),
+                    tpos: b.cursor.tpos,
+                    padded: true,
+                })
+            }
+            None => Action::Sleep { until: None },
+        }
+    }
+
+    fn stats(&self) -> PolicyStats {
+        self.stats.clone()
+    }
+
+    fn name(&self) -> String {
+        format!("GraphB({})", self.btw / crate::MS)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::workloads::Workload;
+    use crate::traffic::RequestSpec;
+    use crate::MS;
+
+    fn spec(id: ReqId, arrival: Nanos, in_len: usize, out_len: usize) -> RequestSpec {
+        RequestSpec {
+            id,
+            arrival,
+            in_len,
+            out_len,
+            model_idx: 0,
+        }
+    }
+
+    fn gb(btw_ms: u64, max_batch: usize) -> (GraphBatching, Reqs) {
+        (
+            GraphBatching::new(Arc::new(Workload::Gnmt.graph()), btw_ms * MS, max_batch),
+            Reqs::default(),
+        )
+    }
+
+    #[test]
+    fn waits_out_the_time_window() {
+        let (mut g, mut reqs) = gb(35, 64);
+        reqs.insert(spec(0, 0, 5, 5));
+        g.on_arrival(0, &reqs, 0);
+        // before the window elapses: sleep until the deadline
+        match g.next_action(MS, &reqs) {
+            Action::Sleep { until } => assert_eq!(until, Some(35 * MS)),
+            a => panic!("{a:?}"),
+        }
+        // at the deadline: issue
+        match g.next_action(35 * MS, &reqs) {
+            Action::Execute(e) => {
+                assert_eq!(e.reqs, vec![0]);
+                assert!(e.padded);
+            }
+            a => panic!("{a:?}"),
+        }
+    }
+
+    #[test]
+    fn full_batch_issues_immediately() {
+        let (mut g, mut reqs) = gb(95, 2);
+        for i in 0..3 {
+            reqs.insert(spec(i, 0, 5, 5));
+            g.on_arrival(0, &reqs, i);
+        }
+        match g.next_action(0, &reqs) {
+            Action::Execute(e) => assert_eq!(e.reqs.len(), 2), // max_batch cap
+            a => panic!("{a:?}"),
+        }
+    }
+
+    #[test]
+    fn active_batch_blocks_new_arrivals() {
+        let (mut g, mut reqs) = gb(5, 64);
+        reqs.insert(spec(0, 0, 5, 5));
+        g.on_arrival(0, &reqs, 0);
+        let _ = g.next_action(5 * MS, &reqs); // issues req 0
+        reqs.insert(spec(1, 6 * MS, 5, 5));
+        g.on_arrival(6 * MS, &reqs, 1);
+        // processor asks again (e.g. after a node): still the active batch
+        match g.next_action(20 * MS, &reqs) {
+            Action::Execute(e) => assert_eq!(e.reqs, vec![0]),
+            a => panic!("{a:?}"),
+        }
+    }
+
+    #[test]
+    fn padded_batch_releases_all_members_at_end() {
+        let (mut g, mut reqs) = gb(0, 64);
+        reqs.insert(spec(0, 0, 2, 1)); // short
+        reqs.insert(spec(1, 0, 6, 6)); // long: pads the batch
+        g.on_arrival(0, &reqs, 0);
+        g.on_arrival(0, &reqs, 1);
+        let graph = Arc::new(Workload::Gnmt.graph());
+        let padded_len = graph.program_len(6, 6);
+        let mut released = Vec::new();
+        let mut steps = 0;
+        loop {
+            match g.next_action(0, &reqs) {
+                Action::Execute(e) => {
+                    steps += 1;
+                    g.on_complete(
+                        0,
+                        &reqs,
+                        &Completion {
+                            exec: e,
+                            transitions: vec![],
+                        },
+                        &mut released,
+                    );
+                }
+                Action::Sleep { .. } => break,
+            }
+            assert!(steps <= padded_len, "batch must finish in padded length");
+        }
+        assert_eq!(steps, padded_len);
+        // both released together at the very end
+        assert_eq!(released, vec![0, 1]);
+    }
+
+    #[test]
+    fn name_embeds_window() {
+        let (g, _) = gb(65, 64);
+        assert_eq!(g.name(), "GraphB(65)");
+    }
+}

@@ -1,0 +1,419 @@
+//! The LazyBatching scheduler (§IV).
+//!
+//! Node-level scheduling over the stack [`BatchTable`]: at every node
+//! boundary (= every `next_action` call) the scheduler
+//!
+//! 1. merges the topmost sub-batches that have reached a common node,
+//! 2. consults the SLA-aware [`SlackPredictor`] to decide how many of the
+//!    pending InfQ inputs may be lazily batched — admitted inputs are
+//!    pushed as a new active sub-batch, *preempting* the current one, and
+//!    catch up from graph node 0,
+//! 3. fires the node at the top of the stack.
+//!
+//! There is **no batching time-window**: a pending input either joins
+//! immediately (slack permitting) or waits for the next boundary. When the
+//! predictor denies admission the active batch runs uninterrupted, exactly
+//! as §IV-B prescribes. An input is always admitted when nothing is in
+//! flight (execution, not batching — no SLA question arises).
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use super::batch_table::{BatchTable, Entry};
+use super::policy::{
+    Action, Batcher, Completion, Exec, PolicyStats, ReqId, Reqs, Transition,
+};
+use super::slack::{SlackMode, SlackPredictor};
+use crate::model::LatencyTable;
+use crate::Nanos;
+
+/// How pending inputs are admitted against the in-flight stack.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionRule {
+    /// Paper default (Eq. 2): every involved request's predicted slack
+    /// must stay non-negative. Requests already past their deadline veto
+    /// preemption — which is what protects batch integrity (and thus
+    /// throughput) under overload; the queue then drains as one big batch
+    /// the moment the stack empties.
+    Eq2,
+    /// Ablation: only *savable* requests veto (a request that cannot meet
+    /// its SLA either way does not block admission). More eager merging,
+    /// more preemption churn under overload — measured by the
+    /// `sens_admission` ablation bench.
+    NoFlip,
+}
+
+/// LazyBatching (and, with [`SlackMode::Oracle`], the paper's `Oracle`
+/// design point).
+pub struct LazyBatching {
+    predictor: SlackPredictor,
+    bt: BatchTable,
+    pending: VecDeque<ReqId>,
+    max_batch: usize,
+    admission: AdmissionRule,
+    stats: PolicyStats,
+}
+
+impl LazyBatching {
+    pub fn new(
+        table: Arc<LatencyTable>,
+        sla_target: Nanos,
+        dec_timesteps: usize,
+        mode: SlackMode,
+        max_batch: usize,
+    ) -> LazyBatching {
+        LazyBatching {
+            predictor: SlackPredictor::new(table, sla_target, dec_timesteps, mode),
+            bt: BatchTable::new(),
+            pending: VecDeque::new(),
+            max_batch,
+            admission: AdmissionRule::Eq2,
+            stats: PolicyStats::default(),
+        }
+    }
+
+    /// Select the admission rule (ablation knob; default [`AdmissionRule::Eq2`]).
+    pub fn with_admission(mut self, rule: AdmissionRule) -> LazyBatching {
+        self.admission = rule;
+        self
+    }
+
+    /// Convenience constructor with the paper's defaults (dec_timesteps =
+    /// 32 for dynamic graphs, 1 otherwise).
+    pub fn with_defaults(
+        table: Arc<LatencyTable>,
+        sla_target: Nanos,
+        mode: SlackMode,
+    ) -> LazyBatching {
+        let dyn_graph = table.graph.is_dynamic();
+        let dec = SlackPredictor::default_dec_timesteps(dyn_graph);
+        // LazyBatching picks its own batching ceiling at the throughput
+        // saturation point (§III-A / Fig. 3): batching a compute-bound
+        // model past saturation only adds latency.
+        let max_batch = table.max_batch.min(table.saturation_batch(0.02));
+        LazyBatching::new(table, sla_target, dec, mode, max_batch)
+    }
+
+    /// Read-only view of the batch table (tests, colocation wrapper).
+    pub fn batch_table(&self) -> &BatchTable {
+        &self.bt
+    }
+
+    fn pending_prefix(&self, k: usize) -> Vec<ReqId> {
+        self.pending.iter().take(k).copied().collect()
+    }
+
+    /// Largest prefix of the pending queue the predictor admits. The test
+    /// is monotone in the admitted count (each extra input only adds
+    /// estimated execution time), so a linear scan finds the maximum.
+    fn admissible_count(&self, now: Nanos, reqs: &Reqs) -> usize {
+        let cap = self.max_batch.min(self.pending.len());
+        match self.admission {
+            AdmissionRule::Eq2 => {
+                let cand = self.pending_prefix(cap);
+                self.predictor.max_admissible(now, reqs, &self.bt, &cand)
+            }
+            AdmissionRule::NoFlip => {
+                // ablation path: per-prefix test (not performance-critical)
+                let mut k = 0;
+                let mut candidate: Vec<ReqId> = Vec::with_capacity(cap);
+                for i in 0..cap {
+                    candidate.push(self.pending[i]);
+                    if self
+                        .predictor
+                        .admission_allowed(now, reqs, &self.bt, &candidate)
+                    {
+                        k = i + 1;
+                    } else {
+                        break;
+                    }
+                }
+                k
+            }
+        }
+    }
+
+    /// Estimated time for a candidate group of size `|cand|` to catch up
+    /// from graph node 0 to `target_tpos` (batched prefix execution, with
+    /// unrolled nodes at the group's longest input / the decoder bound).
+    fn catch_up_cost(&self, reqs: &Reqs, cand: &[ReqId], target_tpos: usize) -> Nanos {
+        let table = &self.predictor.table;
+        let max_in = cand
+            .iter()
+            .map(|&id| reqs.get(id).spec.in_len)
+            .max()
+            .unwrap_or(1);
+        let mut total: Nanos = 0;
+        for i in 0..target_tpos.min(table.graph.nodes.len()) {
+            let rep = match table.graph.nodes[i].class {
+                crate::model::NodeClass::Static => 1,
+                crate::model::NodeClass::Encoder => max_in.max(1),
+                crate::model::NodeClass::Decoder => self.predictor.dec_timesteps.max(1),
+            };
+            total += table.node_latency(i, cand.len()) * rep as Nanos;
+        }
+        total
+    }
+
+    /// Cost/benefit gate for mid-flight admission ("whenever the batching
+    /// unit finds that appropriate to meet latency, throughput, and SLA
+    /// goals", §IV-A). Preempting the stack stalls every in-flight request
+    /// for the candidates' catch-up time; the candidates save (roughly)
+    /// the active batch's remaining time by merging instead of waiting.
+    /// Admit only when the saved time exceeds the inflicted stall and the
+    /// group can actually catch up before the active batch finishes:
+    ///
+    /// `|C| × (remaining − catch_up)  >  in_flight × catch_up`
+    fn preemption_pays_off(&self, reqs: &Reqs, cand: &[ReqId]) -> bool {
+        let Some(top) = self.bt.top() else { return true };
+        let cu = self.catch_up_cost(reqs, cand, top.tpos);
+        // conservative: the soonest any active member could finish
+        let rem = top
+            .reqs
+            .iter()
+            .map(|&id| self.predictor.est_remaining(reqs, id))
+            .min()
+            .unwrap_or(0);
+        if cu >= rem {
+            return false; // cannot merge before the active batch finishes
+        }
+        let in_flight = self.bt.total_reqs() as u128;
+        (cand.len() as u128) * (rem - cu) as u128 > in_flight * cu as u128
+    }
+}
+
+impl Batcher for LazyBatching {
+    fn on_arrival(&mut self, _now: Nanos, _reqs: &Reqs, id: ReqId) {
+        self.pending.push_back(id);
+    }
+
+    fn on_complete(
+        &mut self,
+        _now: Nanos,
+        _reqs: &Reqs,
+        completion: &Completion,
+        released: &mut Vec<ReqId>,
+    ) {
+        // exec.reqs is a clone of the top entry (same order): dispositions
+        // apply positionally — single O(n) pass, no membership scans
+        self.bt.retire_top_by(&completion.transitions);
+        // LazyBatching releases responses the moment a program finishes.
+        for (&id, &tr) in completion.exec.reqs.iter().zip(&completion.transitions) {
+            if tr == Transition::Finished {
+                released.push(id);
+            }
+        }
+    }
+
+    fn next_action(&mut self, now: Nanos, reqs: &Reqs) -> Action {
+        // 1. merge sub-batches that reached a common node
+        self.stats.merges += self.bt.merge_top(self.max_batch);
+
+        // 2. admission of pending inputs (lazy batching decision)
+        if !self.pending.is_empty() {
+            let k = if self.bt.is_empty() {
+                // Nothing in flight: issuing is plain execution, not lazy
+                // batching — the whole backlog drains as one batch (up to
+                // the model-allowed max). Holding a co-queued request back
+                // would delay it by a full graph pass, which the slack
+                // model itself scores strictly worse; and the conservative
+                // Σ-of-singles bound wildly overestimates a *fresh* batch
+                // (Fig. 3: batched execution costs far less than the sum
+                // of its members), so it must not gate the drain.
+                self.max_batch.min(self.pending.len())
+            } else {
+                // In-flight work: lazily batching pendings preempts it.
+                // Eq. 2 bounds how many may join without SLA risk, and the
+                // catch-up cost/benefit test decides whether preempting is
+                // worth it at all (it rarely is when the group is tiny and
+                // the in-flight batch is large).
+                let k = self.admissible_count(now, reqs);
+                if k > 0 && self.preemption_pays_off(reqs, &self.pending_prefix(k)) {
+                    k
+                } else {
+                    0
+                }
+            };
+            if k > 0 {
+                if !self.bt.is_empty() {
+                    self.stats.preemptions += 1;
+                }
+                let ids: Vec<ReqId> = self.pending.drain(..k).collect();
+                self.stats.admitted += ids.len() as u64;
+                self.bt.push(Entry {
+                    reqs: ids,
+                    tpos: 0,
+                });
+                // a brand-new entry may merge with a top that is also at
+                // its node (e.g. both at node 0)
+                self.stats.merges += self.bt.merge_top(self.max_batch);
+            } else {
+                self.stats.denied += 1;
+            }
+        }
+
+        // 3. fire the node at the top of the stack
+        match self.bt.top() {
+            Some(top) => {
+                self.stats.node_execs += 1;
+                self.stats.max_batch_formed =
+                    self.stats.max_batch_formed.max(top.reqs.len() as u64);
+                Action::Execute(Exec {
+                    reqs: top.reqs.clone(),
+                    tpos: top.tpos,
+                    padded: false,
+                })
+            }
+            None => Action::Sleep { until: None },
+        }
+    }
+
+    fn stats(&self) -> PolicyStats {
+        self.stats.clone()
+    }
+
+    fn name(&self) -> String {
+        match self.predictor.mode {
+            SlackMode::Conservative => "LazyB".to_string(),
+            SlackMode::Oracle => "Oracle".to_string(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::workloads::Workload;
+    use crate::npu::systolic::SystolicModel;
+    use crate::traffic::RequestSpec;
+    use crate::MS;
+
+    fn table(w: Workload) -> Arc<LatencyTable> {
+        Arc::new(LatencyTable::profile(
+            Arc::new(w.graph()),
+            &SystolicModel::default_npu(),
+            64,
+        ))
+    }
+
+    fn spec(id: ReqId, arrival: Nanos) -> RequestSpec {
+        RequestSpec {
+            id,
+            arrival,
+            in_len: 1,
+            out_len: 1,
+            model_idx: 0,
+        }
+    }
+
+    #[test]
+    fn idle_server_sleeps() {
+        let mut lb = LazyBatching::with_defaults(table(Workload::ResNet), 100 * MS, SlackMode::Conservative);
+        let reqs = Reqs::default();
+        assert_eq!(lb.next_action(0, &reqs), Action::Sleep { until: None });
+    }
+
+    #[test]
+    fn single_arrival_executes_node_zero() {
+        let mut lb = LazyBatching::with_defaults(table(Workload::ResNet), 100 * MS, SlackMode::Conservative);
+        let mut reqs = Reqs::default();
+        reqs.insert(spec(0, 0));
+        lb.on_arrival(0, &reqs, 0);
+        match lb.next_action(0, &reqs) {
+            Action::Execute(e) => {
+                assert_eq!(e.reqs, vec![0]);
+                assert_eq!(e.tpos, 0);
+                assert!(!e.padded);
+            }
+            a => panic!("expected Execute, got {a:?}"),
+        }
+    }
+
+    #[test]
+    fn co_queued_arrivals_batch_together() {
+        let mut lb = LazyBatching::with_defaults(table(Workload::ResNet), 100 * MS, SlackMode::Conservative);
+        let mut reqs = Reqs::default();
+        for i in 0..4 {
+            reqs.insert(spec(i, 0));
+            lb.on_arrival(0, &reqs, i);
+        }
+        match lb.next_action(0, &reqs) {
+            Action::Execute(e) => assert_eq!(e.reqs.len(), 4),
+            a => panic!("{a:?}"),
+        }
+    }
+
+    #[test]
+    fn blown_sla_request_still_served() {
+        // Request arrived 1 s ago with a 10 ms SLA: slack hopeless, but the
+        // server must still execute it.
+        let mut lb = LazyBatching::with_defaults(table(Workload::ResNet), 10 * MS, SlackMode::Conservative);
+        let mut reqs = Reqs::default();
+        reqs.insert(spec(0, 0));
+        lb.on_arrival(crate::SEC, &reqs, 0);
+        match lb.next_action(crate::SEC, &reqs) {
+            Action::Execute(e) => assert_eq!(e.reqs, vec![0]),
+            a => panic!("{a:?}"),
+        }
+        assert_eq!(lb.stats().admitted, 1);
+    }
+
+    #[test]
+    fn admission_denied_under_tight_sla_with_active_batch() {
+        let mut lb = LazyBatching::with_defaults(table(Workload::Gnmt), 12 * MS, SlackMode::Conservative);
+        let mut reqs = Reqs::default();
+        // first request becomes active
+        reqs.insert(RequestSpec { id: 0, arrival: 0, in_len: 20, out_len: 20, model_idx: 0 });
+        lb.on_arrival(0, &reqs, 0);
+        let a = lb.next_action(0, &reqs);
+        assert!(matches!(a, Action::Execute(_)));
+        // second arrives: batching both would blow the 12 ms SLA
+        // (two GNMT singles ≈ 18 ms combined estimate)
+        reqs.insert(RequestSpec { id: 1, arrival: MS, in_len: 20, out_len: 20, model_idx: 0 });
+        lb.on_arrival(MS, &reqs, 1);
+        match lb.next_action(MS, &reqs) {
+            Action::Execute(e) => {
+                assert_eq!(e.reqs, vec![0], "active batch must run uninterrupted");
+            }
+            a => panic!("{a:?}"),
+        }
+        assert!(lb.stats().denied >= 1);
+    }
+
+    #[test]
+    fn preemption_counted_when_admitting_over_active() {
+        let mut lb = LazyBatching::with_defaults(table(Workload::ResNet), 200 * MS, SlackMode::Conservative);
+        let mut reqs = Reqs::default();
+        reqs.insert(spec(0, 0));
+        lb.on_arrival(0, &reqs, 0);
+        let a0 = lb.next_action(0, &reqs);
+        let exec = match a0 {
+            Action::Execute(e) => e,
+            a => panic!("{a:?}"),
+        };
+        // node 0 completes; req0 advances to node 1
+        let mut released = Vec::new();
+        lb.on_complete(
+            MS,
+            &reqs,
+            &Completion {
+                exec,
+                transitions: vec![Transition::Advanced],
+            },
+            &mut released,
+        );
+        assert!(released.is_empty());
+        // req1 arrives and preempts: it must run node 0 while req0 waits at 1
+        reqs.insert(spec(1, MS));
+        lb.on_arrival(MS, &reqs, 1);
+        match lb.next_action(MS, &reqs) {
+            Action::Execute(e) => {
+                assert_eq!(e.reqs, vec![1]);
+                assert_eq!(e.tpos, 0);
+            }
+            a => panic!("{a:?}"),
+        }
+        assert_eq!(lb.stats().preemptions, 1);
+        assert_eq!(lb.batch_table().depth(), 2);
+    }
+}

@@ -1,0 +1,35 @@
+//! The LazyBatching coordinator — the paper's contribution — plus the
+//! baselines it is evaluated against.
+//!
+//! * [`policy`] — the `Batcher` trait every scheduling policy implements,
+//!   and the request-state types shared with the simulation engine.
+//! * [`batch_table`] — the stack-based batch status table (§IV-B,
+//!   Fig. 10): push on preemption, merge when the two topmost sub-batches
+//!   reach a common graph node.
+//! * [`slack`] — the SLA-aware slack-time predictor (§IV-C, Eq. 2 +
+//!   Algorithm 1), with both the conservative estimator and the oracular
+//!   variant that prices true batched latencies.
+//! * [`lazy`] — the LazyBatching scheduler (`LazyB`), parameterized by the
+//!   admission estimator (conservative ⇒ LazyB, oracular ⇒ Oracle).
+//! * [`graphb`] — baseline graph batching with a batching time-window and
+//!   model-allowed maximum batch size (TF-Serving / TensorRT-IS style).
+//! * [`serial`] — no batching at all.
+//! * [`colocate`] — multi-model co-location (§VI-C).
+
+pub mod batch_table;
+pub mod colocate;
+pub mod graphb;
+pub mod lazy;
+pub mod policy;
+pub mod serial;
+pub mod slack;
+
+pub use batch_table::{BatchTable, Entry};
+pub use colocate::{ColocGraphB, ColocLazy};
+pub use graphb::GraphBatching;
+pub use lazy::LazyBatching;
+pub use policy::{
+    Action, Batcher, Completion, Exec, PolicyStats, ReqId, ReqState, Reqs, Transition,
+};
+pub use serial::Serial;
+pub use slack::{SlackMode, SlackPredictor};

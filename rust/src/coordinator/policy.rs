@@ -1,0 +1,174 @@
+//! The `Batcher` trait and the request-state types shared between the
+//! scheduling policies and the simulation engine.
+//!
+//! Contract (enforced by [`crate::sim::engine`]):
+//!
+//! * The engine owns request cursors and advances them; policies only
+//!   decide *what to run next* at node boundaries.
+//! * `Execute` must name requests that are alive and (unless the policy
+//!   declares padded execution, as graph batching does) whose cursors sit
+//!   exactly at the named template position.
+//! * Requests are *released* (their response leaves the server) by the
+//!   policy, and only after their program is done — graph batching holds
+//!   finished members until the whole padded batch completes, LazyBatching
+//!   releases immediately.
+
+use crate::model::graph::Cursor;
+use crate::traffic::RequestSpec;
+use crate::Nanos;
+
+/// Request identifier (dense, equal to the trace index).
+pub type ReqId = u64;
+
+/// Engine-owned per-request state.
+#[derive(Debug, Clone)]
+pub struct ReqState {
+    pub spec: RequestSpec,
+    pub cursor: Cursor,
+    /// Program finished (all node executions done) but possibly not yet
+    /// released by the policy.
+    pub done: bool,
+    /// Released: latency recorded, request gone from the server.
+    pub released: bool,
+    /// First time the request was issued to the processor (for T_wait).
+    pub first_issue: Option<Nanos>,
+}
+
+impl ReqState {
+    pub fn new(spec: RequestSpec) -> ReqState {
+        ReqState {
+            spec,
+            cursor: Cursor::START,
+            done: false,
+            released: false,
+            first_issue: None,
+        }
+    }
+
+    /// In the server but response not yet sent.
+    pub fn in_flight(&self) -> bool {
+        !self.released
+    }
+}
+
+/// Dense request-state store (ids are trace indices).
+#[derive(Debug, Default)]
+pub struct Reqs {
+    states: Vec<ReqState>,
+}
+
+impl Reqs {
+    pub fn insert(&mut self, spec: RequestSpec) {
+        debug_assert_eq!(spec.id as usize, self.states.len());
+        self.states.push(ReqState::new(spec));
+    }
+
+    pub fn get(&self, id: ReqId) -> &ReqState {
+        &self.states[id as usize]
+    }
+
+    pub fn get_mut(&mut self, id: ReqId) -> &mut ReqState {
+        &mut self.states[id as usize]
+    }
+
+    pub fn len(&self) -> usize {
+        self.states.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.states.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &ReqState> {
+        self.states.iter()
+    }
+}
+
+/// What the policy wants to run next.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Action {
+    /// Issue one node execution for this (sub-)batch.
+    Execute(Exec),
+    /// Nothing runnable; wake at `until` (or at the next arrival if that
+    /// comes first / if `until` is `None`).
+    Sleep { until: Option<Nanos> },
+}
+
+/// One node execution request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Exec {
+    /// The batched requests (all same model).
+    pub reqs: Vec<ReqId>,
+    /// Template node index being executed.
+    pub tpos: usize,
+    /// Padded (graph-batching) semantics: members whose cursor is not at
+    /// `tpos` ride along masked and make no progress; latency is still
+    /// charged at the full member count. LazyBatching never sets this.
+    pub padded: bool,
+}
+
+/// How one request fared in the node execution that just completed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Transition {
+    /// Still at the same template node (one more repeat of an unrolled
+    /// layer remains).
+    Repeat,
+    /// Moved on to the next template node.
+    Advanced,
+    /// Program finished with this execution.
+    Finished,
+    /// Padding no-op: the request was carried in a padded batch but its
+    /// cursor was elsewhere (graph batching only).
+    Masked,
+}
+
+/// Completion report handed to the policy after a node execution.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub exec: Exec,
+    /// Transition per request, parallel to `exec.reqs`.
+    pub transitions: Vec<Transition>,
+}
+
+/// Scheduler statistics (exposed for §VI-D style overhead accounting and
+/// the ablation benches).
+#[derive(Debug, Clone, Default)]
+pub struct PolicyStats {
+    pub preemptions: u64,
+    pub merges: u64,
+    pub node_execs: u64,
+    pub admitted: u64,
+    pub denied: u64,
+    /// Largest batch ever issued in one node execution.
+    pub max_batch_formed: u64,
+}
+
+/// A batching/scheduling policy driven by the engine.
+pub trait Batcher {
+    /// A request entered the inference queue (InfQ).
+    fn on_arrival(&mut self, now: Nanos, reqs: &Reqs, id: ReqId);
+
+    /// The in-flight node execution completed; `released` must be filled
+    /// with every request whose response should leave the server now.
+    fn on_complete(
+        &mut self,
+        now: Nanos,
+        reqs: &Reqs,
+        completion: &Completion,
+        released: &mut Vec<ReqId>,
+    );
+
+    /// A timer the policy asked for (via `Action::Sleep{until}`) fired.
+    fn on_timer(&mut self, _now: Nanos, _reqs: &Reqs) {}
+
+    /// Called whenever the processor is idle: decide the next action.
+    fn next_action(&mut self, now: Nanos, reqs: &Reqs) -> Action;
+
+    /// Scheduling statistics accumulated so far.
+    fn stats(&self) -> PolicyStats {
+        PolicyStats::default()
+    }
+
+    /// Display name for reports.
+    fn name(&self) -> String;
+}

@@ -1,0 +1,132 @@
+//! `Serial` baseline (§VI design point 1): never batch — requests execute
+//! one at a time, FIFO, each running its whole graph to completion.
+
+use std::collections::VecDeque;
+
+use super::policy::{
+    Action, Batcher, Completion, Exec, PolicyStats, ReqId, Reqs, Transition,
+};
+use crate::Nanos;
+
+/// FIFO, batch-size-1 scheduler.
+#[derive(Debug, Default)]
+pub struct Serial {
+    queue: VecDeque<ReqId>,
+    active: Option<ReqId>,
+    stats: PolicyStats,
+}
+
+impl Serial {
+    pub fn new() -> Serial {
+        Serial::default()
+    }
+}
+
+impl Batcher for Serial {
+    fn on_arrival(&mut self, _now: Nanos, _reqs: &Reqs, id: ReqId) {
+        self.queue.push_back(id);
+    }
+
+    fn on_complete(
+        &mut self,
+        _now: Nanos,
+        _reqs: &Reqs,
+        completion: &Completion,
+        released: &mut Vec<ReqId>,
+    ) {
+        debug_assert_eq!(completion.exec.reqs.len(), 1);
+        if completion.transitions[0] == Transition::Finished {
+            released.push(completion.exec.reqs[0]);
+            self.active = None;
+        }
+    }
+
+    fn next_action(&mut self, _now: Nanos, reqs: &Reqs) -> Action {
+        if self.active.is_none() {
+            self.active = self.queue.pop_front();
+            if self.active.is_some() {
+                self.stats.admitted += 1;
+            }
+        }
+        match self.active {
+            Some(id) => {
+                self.stats.node_execs += 1;
+                Action::Execute(Exec {
+                    reqs: vec![id],
+                    tpos: reqs.get(id).cursor.tpos,
+                    padded: false,
+                })
+            }
+            None => Action::Sleep { until: None },
+        }
+    }
+
+    fn stats(&self) -> PolicyStats {
+        self.stats.clone()
+    }
+
+    fn name(&self) -> String {
+        "Serial".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::traffic::RequestSpec;
+
+    fn spec(id: ReqId) -> RequestSpec {
+        RequestSpec {
+            id,
+            arrival: 0,
+            in_len: 1,
+            out_len: 1,
+            model_idx: 0,
+        }
+    }
+
+    #[test]
+    fn fifo_one_at_a_time() {
+        let mut s = Serial::new();
+        let mut reqs = Reqs::default();
+        for i in 0..3 {
+            reqs.insert(spec(i));
+            s.on_arrival(0, &reqs, i);
+        }
+        // first request runs alone even though three are queued
+        let e = match s.next_action(0, &reqs) {
+            Action::Execute(e) => e,
+            a => panic!("{a:?}"),
+        };
+        assert_eq!(e.reqs, vec![0]);
+        // until finished, the same request keeps executing
+        let e2 = match s.next_action(0, &reqs) {
+            Action::Execute(e) => e,
+            a => panic!("{a:?}"),
+        };
+        assert_eq!(e2.reqs, vec![0]);
+        // finish it; next action picks request 1
+        let mut released = Vec::new();
+        s.on_complete(
+            1,
+            &reqs,
+            &Completion {
+                exec: e2,
+                transitions: vec![Transition::Finished],
+            },
+            &mut released,
+        );
+        assert_eq!(released, vec![0]);
+        match s.next_action(1, &reqs) {
+            Action::Execute(e) => assert_eq!(e.reqs, vec![1]),
+            a => panic!("{a:?}"),
+        }
+    }
+
+    #[test]
+    fn empty_queue_sleeps() {
+        let mut s = Serial::new();
+        let reqs = Reqs::default();
+        assert_eq!(s.next_action(0, &reqs), Action::Sleep { until: None });
+    }
+}

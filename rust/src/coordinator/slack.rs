@@ -1,0 +1,535 @@
+//! SLA-aware slack-time prediction (§IV-C, Eq. 1/2 + Algorithm 1).
+//!
+//! The predictor answers one question for the scheduler: *if the pending
+//! inputs are lazily batched with everything already in flight, will any
+//! request's SLA be violated?*
+//!
+//! Two estimators are provided:
+//!
+//! * [`SlackMode::Conservative`] — the paper's deployed model (Eq. 2):
+//!   the batch's future execution time is over-approximated by the **sum
+//!   of every involved request's single-batch execution time**, with
+//!   dynamic graphs over-provisioned to `dec_timesteps` output steps
+//!   (Algorithm 1's N%-coverage bound). Over-estimation shrinks predicted
+//!   slack, which can only *reduce* SLA violations.
+//! * [`SlackMode::Oracle`] — §VI's `Oracle` design point: knows the true
+//!   throughput-vs-latency tradeoff curve of every node at every batch
+//!   size *and* the true output lengths, and forward-simulates the
+//!   BatchTable's deterministic node-level schedule to get exact
+//!   completion times (absent future arrivals).
+
+use std::sync::Arc;
+
+use super::batch_table::BatchTable;
+use super::policy::{ReqId, Reqs};
+use crate::model::graph::NodeClass;
+use crate::model::LatencyTable;
+use crate::Nanos;
+
+/// Which estimator the predictor runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SlackMode {
+    Conservative,
+    Oracle,
+}
+
+/// The slack-time predictor.
+pub struct SlackPredictor {
+    pub table: Arc<LatencyTable>,
+    pub sla_target: Nanos,
+    /// Static decoder-unroll bound (Algorithm 1's `dec_timesteps`).
+    pub dec_timesteps: usize,
+    pub mode: SlackMode,
+}
+
+impl SlackPredictor {
+    pub fn new(
+        table: Arc<LatencyTable>,
+        sla_target: Nanos,
+        dec_timesteps: usize,
+        mode: SlackMode,
+    ) -> SlackPredictor {
+        SlackPredictor {
+            table,
+            sla_target,
+            dec_timesteps,
+            mode,
+        }
+    }
+
+    /// Conservative single-request remaining-time estimate from the
+    /// request's current cursor (Eq. 2's `SingleInputExecTime_i`, reduced
+    /// by progress already made).
+    pub fn est_remaining(&self, reqs: &Reqs, id: ReqId) -> Nanos {
+        let st = reqs.get(id);
+        self.table.remaining_exec_time(
+            st.cursor.tpos,
+            st.cursor.step,
+            st.spec.in_len,
+            self.dec_timesteps,
+        )
+    }
+
+    /// Eq. 2 admission test: may the pending set `pending` be lazily
+    /// batched given the in-flight sub-batches in `bt`? Returns the
+    /// worst-case (minimum) predicted slack across every involved request;
+    /// admission is allowed iff the result is `>= 0`.
+    ///
+    /// `now` supplies each request's elapsed time (`T_wait` + progress
+    /// time already consumed), so `slack_i = SLA - (elapsed_i + Σ_j
+    /// est_remaining_j)` — a strict over-approximation of Eq. 2's
+    /// `T_wait + Σ SingleInputExecTime` for every request.
+    pub fn min_slack_if_admitted(
+        &self,
+        now: Nanos,
+        reqs: &Reqs,
+        bt: &BatchTable,
+        pending: &[ReqId],
+    ) -> i64 {
+        match self.mode {
+            SlackMode::Conservative => self.min_slack_conservative(now, reqs, bt, pending),
+            SlackMode::Oracle => self.min_slack_oracle(now, reqs, bt, pending),
+        }
+    }
+
+    /// Largest admissible prefix of `pending` under Eq. 2 (every involved
+    /// request's predicted slack stays non-negative).
+    ///
+    /// Hot path: called at every node boundary. The conservative mode
+    /// computes the whole scan incrementally — O(in-flight + |pending|)
+    /// total instead of O(|pending| × in-flight) — exploiting that the
+    /// prefix admission test is monotone: the remaining-time sum only
+    /// grows and the min-headroom only shrinks as candidates are added.
+    /// The oracle mode binary-searches the boundary (O(log n) forward
+    /// simulations).
+    pub fn max_admissible(
+        &self,
+        now: Nanos,
+        reqs: &Reqs,
+        bt: &BatchTable,
+        pending: &[ReqId],
+    ) -> usize {
+        match self.mode {
+            SlackMode::Conservative => {
+                let mut total: i64 = 0;
+                // headroom_i = SLA - elapsed_i; min over in-flight
+                let mut min_headroom = i64::MAX;
+                for e in bt.iter_top_down() {
+                    for &id in &e.reqs {
+                        total += self.est_remaining(reqs, id) as i64;
+                        let elapsed = now.saturating_sub(reqs.get(id).spec.arrival);
+                        min_headroom =
+                            min_headroom.min(self.sla_target as i64 - elapsed as i64);
+                    }
+                }
+                let mut best = 0;
+                for (i, &id) in pending.iter().enumerate() {
+                    total += self.est_remaining(reqs, id) as i64;
+                    let elapsed = now.saturating_sub(reqs.get(id).spec.arrival);
+                    min_headroom = min_headroom.min(self.sla_target as i64 - elapsed as i64);
+                    if min_headroom - total >= 0 {
+                        best = i + 1;
+                    } else {
+                        break;
+                    }
+                }
+                best
+            }
+            SlackMode::Oracle => {
+                // binary search the largest k with min_slack(prefix k) >= 0
+                let (mut lo, mut hi) = (0usize, pending.len());
+                while lo < hi {
+                    let mid = (lo + hi + 1) / 2;
+                    if self.min_slack_if_admitted(now, reqs, bt, &pending[..mid]) >= 0 {
+                        lo = mid;
+                    } else {
+                        hi = mid - 1;
+                    }
+                }
+                lo
+            }
+        }
+    }
+
+    /// Admission decision used by the scheduler: lazily batching `pending`
+    /// must not *flip* any request that would otherwise meet its SLA into
+    /// a violation.
+    ///
+    /// This is Eq. 2 with the paper's stated objective ("minimize the
+    /// number of SLA violations first and improve throughput second")
+    /// applied to both sides of the estimate: a request whose slack is
+    /// already negative *without* the admission cannot be saved by denying
+    /// it — denying only starves throughput and drags every later request
+    /// past its deadline too. So already-doomed requests do not veto;
+    /// requests that can still make their deadline do.
+    pub fn admission_allowed(
+        &self,
+        now: Nanos,
+        reqs: &Reqs,
+        bt: &BatchTable,
+        pending: &[ReqId],
+    ) -> bool {
+        match self.mode {
+            SlackMode::Conservative => {
+                let mut rem_inflight: Nanos = 0;
+                let mut inflight: Vec<ReqId> = Vec::new();
+                for e in bt.iter_top_down() {
+                    for &id in &e.reqs {
+                        rem_inflight += self.est_remaining(reqs, id);
+                        inflight.push(id);
+                    }
+                }
+                let mut rem_cand: Nanos = 0;
+                let cand_rem: Vec<Nanos> = pending
+                    .iter()
+                    .map(|&id| {
+                        let r = self.est_remaining(reqs, id);
+                        rem_cand += r;
+                        r
+                    })
+                    .collect();
+                // in-flight requests: slack before vs after admission
+                for &id in &inflight {
+                    let elapsed = now.saturating_sub(reqs.get(id).spec.arrival) as i64;
+                    let before = self.sla_target as i64 - elapsed - rem_inflight as i64;
+                    let after = before - rem_cand as i64;
+                    if before >= 0 && after < 0 {
+                        return false;
+                    }
+                }
+                // candidates: best case (admitted alone, right now) vs the
+                // full candidate set
+                for (i, &id) in pending.iter().enumerate() {
+                    let elapsed = now.saturating_sub(reqs.get(id).spec.arrival) as i64;
+                    let base = self.sla_target as i64 - elapsed - rem_inflight as i64;
+                    let best_alone = base - cand_rem[i] as i64;
+                    let after = base - rem_cand as i64;
+                    if best_alone >= 0 && after < 0 {
+                        return false;
+                    }
+                }
+                true
+            }
+            SlackMode::Oracle => {
+                // true completion times with vs without the admission
+                let with = self.oracle_completions(now, reqs, bt, pending);
+                let without = self.oracle_completions(now, reqs, bt, &[]);
+                let meets = |t: Nanos, id: ReqId| {
+                    t.saturating_sub(reqs.get(id).spec.arrival) <= self.sla_target
+                };
+                for (id, t_with) in &with {
+                    let would_meet = match without.iter().find(|(i, _)| i == id) {
+                        Some(&(_, t_wo)) => meets(t_wo, *id),
+                        // candidate: best case = drain current stack, then
+                        // run the candidate set as its own batch
+                        None => true,
+                    };
+                    if would_meet && !meets(*t_with, *id) {
+                        return false;
+                    }
+                }
+                true
+            }
+        }
+    }
+
+    fn min_slack_conservative(
+        &self,
+        now: Nanos,
+        reqs: &Reqs,
+        bt: &BatchTable,
+        pending: &[ReqId],
+    ) -> i64 {
+        // Σ over every involved request of its single-batch remaining time
+        let mut total_remaining: Nanos = 0;
+        let mut involved: Vec<ReqId> = Vec::new();
+        for e in bt.iter_top_down() {
+            involved.extend_from_slice(&e.reqs);
+        }
+        involved.extend_from_slice(pending);
+        for &id in &involved {
+            total_remaining += self.est_remaining(reqs, id);
+        }
+        // slack_i = SLA - (elapsed_i + total_remaining); minimize over i
+        let mut min_slack = i64::MAX;
+        for &id in &involved {
+            let elapsed = now.saturating_sub(reqs.get(id).spec.arrival);
+            let slack =
+                self.sla_target as i64 - (elapsed as i64 + total_remaining as i64);
+            min_slack = min_slack.min(slack);
+        }
+        min_slack
+    }
+
+    /// Oracle: forward-simulate the LazyBatching schedule using *true*
+    /// batched node latencies and *true* output lengths; min slack over
+    /// the exact completion times.
+    fn min_slack_oracle(
+        &self,
+        now: Nanos,
+        reqs: &Reqs,
+        bt: &BatchTable,
+        pending: &[ReqId],
+    ) -> i64 {
+        let completions = self.oracle_completions(now, reqs, bt, pending);
+        completions
+            .iter()
+            .map(|&(id, t)| {
+                self.sla_target as i64 - (t as i64 - reqs.get(id).spec.arrival as i64)
+            })
+            .min()
+            .unwrap_or(self.sla_target as i64)
+    }
+
+    /// Forward-simulate the BatchTable schedule (pendings pushed on top,
+    /// deterministic node-level execution with merges, no future arrivals)
+    /// and return every involved request's completion time.
+    fn oracle_completions(
+        &self,
+        now: Nanos,
+        reqs: &Reqs,
+        bt: &BatchTable,
+        pending: &[ReqId],
+    ) -> Vec<(ReqId, Nanos)> {
+        let graph = &self.table.graph;
+        // Scratch stack with per-member decode steps carried inline (no
+        // per-step lookups — this runs O(log n) times per node boundary
+        // in Oracle mode).
+        #[derive(Clone)]
+        struct SimEntry {
+            ids: Vec<(ReqId, usize)>, // (request, step within tpos)
+            tpos: usize,
+        }
+        let mut stack: Vec<SimEntry> = bt
+            .iter_top_down()
+            .map(|e| SimEntry {
+                ids: e
+                    .reqs
+                    .iter()
+                    .map(|&id| (id, reqs.get(id).cursor.step))
+                    .collect(),
+                tpos: e.tpos,
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .rev()
+            .collect(); // bottom..top order
+        if !pending.is_empty() {
+            stack.push(SimEntry {
+                ids: pending.iter().map(|&id| (id, 0)).collect(),
+                tpos: 0,
+            });
+        }
+        let mut t: Nanos = now;
+        let mut completions: Vec<(ReqId, Nanos)> = Vec::new();
+        let max_batch = self.table.max_batch;
+        let mut guard = 0u64;
+        while !stack.is_empty() {
+            guard += 1;
+            assert!(
+                guard < 2_000_000,
+                "oracle forward simulation did not terminate"
+            );
+            // merge top pairs when possible
+            if stack.len() >= 2 {
+                let n = stack.len();
+                if stack[n - 2].tpos == stack[n - 1].tpos
+                    && stack[n - 2].ids.len() + stack[n - 1].ids.len() <= max_batch
+                {
+                    let top = stack.pop().unwrap();
+                    stack.last_mut().unwrap().ids.extend(top.ids);
+                    continue;
+                }
+            }
+            // execute top's node once at its true batch size
+            let top = stack.last_mut().unwrap();
+            let tpos = top.tpos;
+            t += self.table.node_latency(tpos, top.ids.len());
+            let mut advanced: Vec<(ReqId, usize)> = Vec::new();
+            top.ids.retain_mut(|(id, step)| {
+                let st = reqs.get(*id);
+                let rep = graph.repeats(tpos, st.spec.in_len, st.spec.out_len);
+                *step += 1;
+                if *step >= rep {
+                    if tpos + 1 >= graph.nodes.len() {
+                        completions.push((*id, t));
+                    } else {
+                        advanced.push((*id, 0));
+                    }
+                    false
+                } else {
+                    true
+                }
+            });
+            let repeating_empty = top.ids.is_empty();
+            if repeating_empty {
+                stack.pop();
+            }
+            if !advanced.is_empty() {
+                // advanced group sits beneath any repeating survivors
+                let at = stack.len() - if repeating_empty { 0 } else { 1 };
+                stack.insert(
+                    at,
+                    SimEntry {
+                        ids: advanced,
+                        tpos: tpos + 1,
+                    },
+                );
+            }
+        }
+        completions
+    }
+
+    /// The `dec_timesteps` default the paper uses: the N=90% coverage
+    /// point of the output-length distribution (§IV-C; 32 in §VI).
+    pub fn default_dec_timesteps(graph_dynamic: bool) -> usize {
+        if graph_dynamic {
+            32
+        } else {
+            1
+        }
+    }
+
+    /// True whether the graph has any decoder node (needs the bound).
+    pub fn graph_is_dynamic(&self) -> bool {
+        self.table
+            .graph
+            .nodes
+            .iter()
+            .any(|n| n.class != NodeClass::Static)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batch_table::Entry;
+    use crate::model::workloads::Workload;
+    use crate::model::LatencyTable;
+    use crate::npu::systolic::SystolicModel;
+    use crate::traffic::RequestSpec;
+    use crate::MS;
+
+    fn setup(w: Workload, sla_ms: u64, mode: SlackMode) -> (Arc<LatencyTable>, SlackPredictor) {
+        let t = Arc::new(LatencyTable::profile(
+            Arc::new(w.graph()),
+            &SystolicModel::default_npu(),
+            64,
+        ));
+        let p = SlackPredictor::new(t.clone(), sla_ms * MS, 32, mode);
+        (t, p)
+    }
+
+    fn req(id: ReqId, arrival: Nanos, in_len: usize, out_len: usize) -> RequestSpec {
+        RequestSpec {
+            id,
+            arrival,
+            in_len,
+            out_len,
+            model_idx: 0,
+        }
+    }
+
+    #[test]
+    fn fresh_request_under_loose_sla_is_admitted() {
+        let (_t, p) = setup(Workload::ResNet, 100, SlackMode::Conservative);
+        let mut reqs = Reqs::default();
+        reqs.insert(req(0, 0, 1, 1));
+        let bt = BatchTable::new();
+        let slack = p.min_slack_if_admitted(0, &reqs, &bt, &[0]);
+        assert!(slack > 0, "slack={slack}");
+    }
+
+    #[test]
+    fn tight_sla_denies_batching() {
+        // SLA of 2 ms on GNMT (≈9 ms serial latency): nothing fits.
+        let (_t, p) = setup(Workload::Gnmt, 2, SlackMode::Conservative);
+        let mut reqs = Reqs::default();
+        reqs.insert(req(0, 0, 20, 20));
+        let bt = BatchTable::new();
+        let slack = p.min_slack_if_admitted(0, &reqs, &bt, &[0]);
+        assert!(slack < 0, "slack={slack}");
+    }
+
+    #[test]
+    fn admitting_more_pendings_monotonically_shrinks_slack() {
+        let (_t, p) = setup(Workload::ResNet, 100, SlackMode::Conservative);
+        let mut reqs = Reqs::default();
+        for i in 0..10 {
+            reqs.insert(req(i, 0, 1, 1));
+        }
+        let bt = BatchTable::new();
+        let mut prev = i64::MAX;
+        for k in 1..=10u64 {
+            let ids: Vec<ReqId> = (0..k).collect();
+            let s = p.min_slack_if_admitted(0, &reqs, &bt, &ids);
+            assert!(s < prev, "k={k}: {s} !< {prev}");
+            prev = s;
+        }
+    }
+
+    #[test]
+    fn elapsed_time_counts_against_slack() {
+        let (_t, p) = setup(Workload::ResNet, 100, SlackMode::Conservative);
+        let mut reqs = Reqs::default();
+        reqs.insert(req(0, 0, 1, 1));
+        let bt = BatchTable::new();
+        let early = p.min_slack_if_admitted(0, &reqs, &bt, &[0]);
+        let late = p.min_slack_if_admitted(50 * MS, &reqs, &bt, &[0]);
+        assert_eq!(early - late, 50 * MS as i64);
+    }
+
+    #[test]
+    fn conservative_is_not_less_pessimistic_than_oracle() {
+        // The conservative estimator must predict <= slack vs the oracle
+        // (over-estimation of execution time shrinks slack).
+        for w in [Workload::ResNet, Workload::Gnmt, Workload::Transformer] {
+            let (_t, cons) = setup(w, 100, SlackMode::Conservative);
+            let (_t2, orac) = setup(w, 100, SlackMode::Oracle);
+            let mut reqs = Reqs::default();
+            for i in 0..4 {
+                reqs.insert(req(i, 0, 15, 14));
+            }
+            let mut bt = BatchTable::new();
+            bt.push(Entry {
+                reqs: vec![0, 1],
+                tpos: 2,
+            });
+            let s_cons = cons.min_slack_if_admitted(MS, &reqs, &bt, &[2, 3]);
+            let s_orac = orac.min_slack_if_admitted(MS, &reqs, &bt, &[2, 3]);
+            assert!(
+                s_cons <= s_orac,
+                "{}: conservative {s_cons} > oracle {s_orac}",
+                w.name()
+            );
+        }
+    }
+
+    #[test]
+    fn oracle_terminates_and_is_finite_on_empty() {
+        let (_t, p) = setup(Workload::Transformer, 100, SlackMode::Oracle);
+        let reqs = Reqs::default();
+        let bt = BatchTable::new();
+        let s = p.min_slack_if_admitted(0, &reqs, &bt, &[]);
+        assert_eq!(s, 100 * MS as i64);
+    }
+
+    #[test]
+    fn oracle_uses_true_output_length() {
+        // A short true output must give the oracle MORE slack than a long
+        // one, while the conservative estimate (dec bound) ignores it.
+        let (_t, orac) = setup(Workload::Gnmt, 100, SlackMode::Oracle);
+        let (_t2, cons) = setup(Workload::Gnmt, 100, SlackMode::Conservative);
+        let mut short = Reqs::default();
+        short.insert(req(0, 0, 10, 3));
+        let mut long = Reqs::default();
+        long.insert(req(0, 0, 10, 40));
+        let bt = BatchTable::new();
+        let s_short = orac.min_slack_if_admitted(0, &short, &bt, &[0]);
+        let s_long = orac.min_slack_if_admitted(0, &long, &bt, &[0]);
+        assert!(s_short > s_long);
+        let c_short = cons.min_slack_if_admitted(0, &short, &bt, &[0]);
+        let c_long = cons.min_slack_if_admitted(0, &long, &bt, &[0]);
+        assert_eq!(c_short, c_long);
+    }
+}

@@ -1,0 +1,46 @@
+//! # LazyBatching — an SLA-aware batching system for cloud ML inference
+//!
+//! Reproduction of Choi, Kim & Rhu, *"LazyBatching: An SLA-aware Batching
+//! System for Cloud Machine Learning Inference"* (2020/HPCA'21).
+//!
+//! The library is organised in three layers (see `DESIGN.md`):
+//!
+//! * **L3 (this crate)** — the serving coordinator: the [`coordinator`]
+//!   module implements the paper's contribution (node-level scheduling, a
+//!   stack-based `BatchTable`, and the SLA-aware slack-time predictor)
+//!   together with the `Serial`, `GraphB(N)` and `Oracle` baselines. The
+//!   [`sim`] module is a discrete-event engine that drives any of the
+//!   policies over a cycle-level NPU cost model ([`npu`]), the paper's
+//!   workload zoo ([`model`]) and a Poisson traffic generator
+//!   ([`traffic`]). The [`runtime`] + [`server`] modules are the *real
+//!   execution* path: they load per-node AOT-compiled HLO artifacts
+//!   (produced by `python/compile/aot.py`) into PJRT and serve batched
+//!   requests with genuine node-level preemption and batch merging.
+//! * **L2 (python/compile/model.py)** — a JAX mini-Transformer split into
+//!   per-node jit functions, AOT-lowered once at build time.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the compute
+//!   hot-spots, validated against a pure-`jnp` oracle.
+//!
+//! Python never runs on the request path; the rust binary is fully
+//! self-contained once `make artifacts` has produced `artifacts/`.
+
+pub mod coordinator;
+pub mod exp;
+pub mod metrics;
+pub mod model;
+pub mod npu;
+pub mod runtime;
+pub mod server;
+pub mod sim;
+pub mod traffic;
+pub mod util;
+
+/// Simulated time is measured in integer **nanoseconds** throughout.
+pub type Nanos = u64;
+
+/// One millisecond in [`Nanos`].
+pub const MS: Nanos = 1_000_000;
+/// One microsecond in [`Nanos`].
+pub const US: Nanos = 1_000;
+/// One second in [`Nanos`].
+pub const SEC: Nanos = 1_000_000_000;

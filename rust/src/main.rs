@@ -1,0 +1,259 @@
+//! `lazybatchingd` — the LazyBatching serving daemon / experiment CLI.
+//!
+//! Subcommands:
+//!
+//! * `simulate`  — run one policy × workload × arrival-rate point on the
+//!   cycle-level NPU simulator and print the paper-style metrics.
+//! * `sweep`     — Fig-12/13-style sweep over rates and policies.
+//! * `serve`     — REAL execution: load the AOT artifacts (built by
+//!   `make artifacts`), serve a Poisson stream of requests through the
+//!   PJRT node-level runtime with lazy batching, report latency and
+//!   throughput.
+//! * `workloads` — list the benchmark zoo with Table-II latencies.
+//!
+//! Examples:
+//!
+//! ```text
+//! lazybatchingd simulate --workload gnmt --policy lazy --rate 1000
+//! lazybatchingd sweep --workload transformer --rates 16,250,1000
+//! lazybatchingd serve --rate 200 --requests 500 --policy lazy
+//! ```
+
+use anyhow::{bail, Result};
+use lazybatching::exp::{self, DeviceKind, ExpConfig, PolicyCfg};
+use lazybatching::model::{LatencyTable, Workload, WMT_MEAN_IN, WMT_MEAN_OUT};
+use lazybatching::npu::systolic::SystolicModel;
+use lazybatching::server::{self, ServeConfig, ServePolicy, ServeRequest};
+use lazybatching::traffic::PoissonArrivals;
+use lazybatching::util::cli::Args;
+use lazybatching::util::json::Json;
+use lazybatching::util::prng::Prng;
+use lazybatching::util::table::{f3, Table};
+use lazybatching::{MS, SEC};
+use std::sync::Arc;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let result = match cmd {
+        "simulate" => cmd_simulate(&args),
+        "sweep" => cmd_sweep(&args),
+        "serve" => cmd_serve(&args),
+        "workloads" => cmd_workloads(),
+        "help" | "--help" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            print_help();
+            Err(anyhow::anyhow!("unknown subcommand '{other}'"))
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "lazybatchingd — SLA-aware batching for cloud ML inference\n\n\
+         USAGE: lazybatchingd <simulate|sweep|serve|workloads> [flags]\n\n\
+         simulate   --workload W --policy <serial|graphb|lazy|oracle> [--btw MS]\n\
+         \x20          [--rate R] [--sla MS] [--runs N] [--duration S] [--gpu] [--json]\n\
+         sweep      --workload W [--rates a,b,c] [--sla MS] [--runs N]\n\
+         serve      [--artifacts DIR] [--rate R] [--requests N] [--sla MS]\n\
+         \x20          [--policy <lazy|graphb|serial>] [--btw MS] [--max-batch B]\n\
+         workloads  (list the zoo and Table-II single-batch latencies)"
+    );
+}
+
+fn parse_policy(args: &Args) -> Result<PolicyCfg> {
+    Ok(match args.get_or("policy", "lazy") {
+        "serial" => PolicyCfg::Serial,
+        "graphb" => PolicyCfg::GraphB(args.get_u64("btw", 35)?),
+        "lazy" => PolicyCfg::Lazy,
+        "oracle" => PolicyCfg::Oracle,
+        p => bail!("unknown policy '{p}'"),
+    })
+}
+
+fn parse_workload(args: &Args) -> Result<Workload> {
+    let name = args.get_or("workload", "resnet");
+    Workload::from_name(name).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown workload '{name}' (expected one of {:?})",
+            Workload::ALL.map(|w| w.name())
+        )
+    })
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let cfg = ExpConfig {
+        workload: parse_workload(args)?,
+        policy: parse_policy(args)?,
+        rate: args.get_f64("rate", 250.0)?,
+        duration: (args.get_f64("duration", 2.0)? * SEC as f64) as u64,
+        runs: args.get_usize("runs", 20)?,
+        sla: args.get_u64("sla", 100)? * MS,
+        dec_timesteps: args.get_usize("dec-timesteps", 0)?,
+        max_batch: args.get_usize("max-batch", 64)?,
+        device: if args.flag("gpu") {
+            DeviceKind::Gpu
+        } else {
+            DeviceKind::Npu
+        },
+        ..ExpConfig::default()
+    };
+    let agg = exp::run(&cfg);
+    let (lat_lo, lat_hi) = agg.latency_p25_p75();
+    if args.flag("json") {
+        let j = Json::obj()
+            .set("workload", cfg.workload.name())
+            .set("policy", cfg.policy.name())
+            .set("rate", cfg.rate)
+            .set("mean_latency_ms", agg.mean_latency_ms())
+            .set("latency_p25_ms", lat_lo)
+            .set("latency_p75_ms", lat_hi)
+            .set("p99_ms", agg.p99_ms())
+            .set("throughput", agg.mean_throughput())
+            .set("violation_rate", agg.violation_rate(cfg.sla));
+        println!("{}", j.render());
+    } else {
+        println!(
+            "{} / {} @ {} req/s ({} band)",
+            cfg.workload.name(),
+            cfg.policy.name(),
+            cfg.rate,
+            PoissonArrivals::band(cfg.rate)
+        );
+        let mut t = Table::new(vec!["metric", "value"]);
+        t.row(vec!["mean latency (ms)".to_string(), f3(agg.mean_latency_ms())]);
+        t.row(vec![
+            "p25..p75 (ms)".to_string(),
+            format!("{}..{}", f3(lat_lo), f3(lat_hi)),
+        ]);
+        t.row(vec!["p99 latency (ms)".to_string(), f3(agg.p99_ms())]);
+        t.row(vec!["throughput (req/s)".to_string(), f3(agg.mean_throughput())]);
+        t.row(vec![
+            "SLA violation rate".to_string(),
+            f3(agg.violation_rate(cfg.sla)),
+        ]);
+        t.print();
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let workload = parse_workload(args)?;
+    let rates = args.get_f64_list("rates", &exp::RATE_GRID)?;
+    let runs = args.get_usize("runs", 5)?;
+    let sla = args.get_u64("sla", 100)? * MS;
+    let mut t = Table::new(vec!["rate", "policy", "lat_ms", "p99_ms", "tput", "viol"]);
+    for &rate in &rates {
+        let base = ExpConfig {
+            workload,
+            rate,
+            runs,
+            sla,
+            duration: SEC,
+            ..ExpConfig::default()
+        };
+        let mut policies = vec![PolicyCfg::Serial, PolicyCfg::Lazy, PolicyCfg::Oracle];
+        for w in exp::GRAPHB_WINDOWS_MS {
+            policies.push(PolicyCfg::GraphB(w));
+        }
+        for p in policies {
+            let agg = exp::run(&ExpConfig {
+                policy: p,
+                ..base.clone()
+            });
+            t.row(vec![
+                format!("{rate}"),
+                p.name(),
+                f3(agg.mean_latency_ms()),
+                f3(agg.p99_ms()),
+                f3(agg.mean_throughput()),
+                f3(agg.violation_rate(sla)),
+            ]);
+        }
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts/minifmr"));
+    let registry = lazybatching::runtime::NodeRegistry::load(&dir)?;
+    println!(
+        "loaded {} ({} nodes × {:?} batches) on {}",
+        registry.manifest.model,
+        registry.manifest.nodes.len(),
+        registry.manifest.batches,
+        registry.platform()
+    );
+    let policy = match args.get_or("policy", "lazy") {
+        "lazy" => ServePolicy::Lazy,
+        "graphb" => ServePolicy::GraphB {
+            btw_ms: args.get_u64("btw", 10)?,
+        },
+        "serial" => ServePolicy::Serial,
+        p => bail!("unknown serve policy '{p}'"),
+    };
+    let cfg = ServeConfig {
+        policy,
+        sla: args.get_u64("sla", 100)? * MS,
+        max_batch: args.get_usize("max-batch", 8)?,
+        profile_reps: 3,
+    };
+    let rate = args.get_f64("rate", 200.0)?;
+    let n = args.get_usize("requests", 200)?;
+    let seq = registry.manifest.seq;
+    let vocab = registry.manifest.vocab as u64;
+    let mut rng = Prng::new(args.get_u64("seed", 42)?);
+    let trace: Vec<(u64, ServeRequest)> = PoissonArrivals::new(rate, rng.next_u64())
+        .take(n)
+        .map(|at| {
+            let tokens: Vec<i32> = (0..seq).map(|_| rng.next_range(vocab) as i32).collect();
+            (at, ServeRequest { tokens })
+        })
+        .collect();
+    println!("serving {n} requests at {rate} req/s ({:?})...", cfg.policy);
+    let report = server::serve_trace(&registry, &cfg, &trace)?;
+    let s = report.summary();
+    let mut t = Table::new(vec!["metric", "value"]);
+    t.row(vec!["requests".to_string(), format!("{}", s.count)]);
+    t.row(vec!["mean latency (ms)".to_string(), f3(s.mean)]);
+    t.row(vec![
+        "p50 / p99 (ms)".to_string(),
+        format!("{} / {}", f3(s.p50), f3(s.p99)),
+    ]);
+    t.row(vec!["throughput (req/s)".to_string(), f3(report.throughput())]);
+    t.row(vec!["node executions".to_string(), format!("{}", report.node_execs)]);
+    t.row(vec!["merges".to_string(), format!("{}", report.merges)]);
+    t.row(vec!["preemptions".to_string(), format!("{}", report.preemptions)]);
+    t.print();
+    Ok(())
+}
+
+fn cmd_workloads() -> Result<()> {
+    let dev = SystolicModel::default_npu();
+    let mut t = Table::new(vec!["workload", "nodes", "dynamic", "b=1 latency (ms)"]);
+    for w in Workload::ALL {
+        let g = Arc::new(w.graph());
+        let table = LatencyTable::profile(g.clone(), &dev, 64);
+        let (i, o) = if g.is_dynamic() {
+            (WMT_MEAN_IN, WMT_MEAN_OUT)
+        } else {
+            (1, 1)
+        };
+        t.row(vec![
+            w.name().to_string(),
+            format!("{}", g.nodes.len()),
+            format!("{}", g.is_dynamic()),
+            f3(table.true_exec_time(i, o) as f64 / MS as f64),
+        ]);
+    }
+    t.print();
+    Ok(())
+}

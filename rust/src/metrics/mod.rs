@@ -1,0 +1,146 @@
+//! Serving metrics: latency distributions, throughput, SLA accounting.
+//!
+//! Wraps [`crate::sim::RunResult`]-level data into the aggregates the
+//! paper reports: average latency with p25/p75 error bars across runs
+//! (Fig. 12), throughput (Fig. 13), full latency CDFs and p99 tail
+//! (Fig. 14), and SLA violation rates per deadline (Fig. 15).
+
+use crate::sim::RunResult;
+use crate::util::stats::{self, Summary};
+use crate::{Nanos, MS};
+
+/// Aggregate over N independent simulation runs of one configuration.
+#[derive(Debug, Clone)]
+pub struct Aggregate {
+    /// Per-run mean latency (ms).
+    pub run_mean_latency_ms: Vec<f64>,
+    /// Per-run throughput (req/s).
+    pub run_throughput: Vec<f64>,
+    /// Per-run p99 latency (ms).
+    pub run_p99_ms: Vec<f64>,
+    /// Pooled latency samples across runs (ms) — for CDFs.
+    pub pooled_ms: Vec<f64>,
+}
+
+impl Aggregate {
+    pub fn from_runs(runs: &[RunResult]) -> Aggregate {
+        let mut agg = Aggregate {
+            run_mean_latency_ms: Vec::with_capacity(runs.len()),
+            run_throughput: Vec::with_capacity(runs.len()),
+            run_p99_ms: Vec::with_capacity(runs.len()),
+            pooled_ms: Vec::new(),
+        };
+        for r in runs {
+            let ms = r.latencies_ms();
+            let s = Summary::of(&ms);
+            agg.run_mean_latency_ms.push(s.mean);
+            agg.run_p99_ms.push(s.p99);
+            agg.run_throughput.push(r.throughput());
+            agg.pooled_ms.extend_from_slice(&ms);
+        }
+        agg
+    }
+
+    /// Mean-of-means latency (the paper's "average latency").
+    pub fn mean_latency_ms(&self) -> f64 {
+        stats::mean(&self.run_mean_latency_ms)
+    }
+
+    /// 25th/75th percentile of per-run mean latency (Fig. 12 error bars).
+    pub fn latency_p25_p75(&self) -> (f64, f64) {
+        let mut v = self.run_mean_latency_ms.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        (
+            stats::percentile_sorted(&v, 25.0),
+            stats::percentile_sorted(&v, 75.0),
+        )
+    }
+
+    pub fn mean_throughput(&self) -> f64 {
+        stats::mean(&self.run_throughput)
+    }
+
+    pub fn throughput_p25_p75(&self) -> (f64, f64) {
+        let mut v = self.run_throughput.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        (
+            stats::percentile_sorted(&v, 25.0),
+            stats::percentile_sorted(&v, 75.0),
+        )
+    }
+
+    /// Pooled p99 tail latency (Fig. 14's headline number).
+    pub fn p99_ms(&self) -> f64 {
+        let mut v = self.pooled_ms.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        if v.is_empty() {
+            0.0
+        } else {
+            stats::percentile_sorted(&v, 99.0)
+        }
+    }
+
+    /// Fraction of pooled requests over the deadline.
+    pub fn violation_rate(&self, sla: Nanos) -> f64 {
+        if self.pooled_ms.is_empty() {
+            return 0.0;
+        }
+        let sla_ms = sla as f64 / MS as f64;
+        self.pooled_ms.iter().filter(|&&l| l > sla_ms).count() as f64
+            / self.pooled_ms.len() as f64
+    }
+
+    /// Empirical CDF over pooled latencies at the given thresholds (ms).
+    pub fn cdf(&self, thresholds_ms: &[f64]) -> Vec<f64> {
+        stats::cdf_at(&self.pooled_ms, thresholds_ms)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::PolicyStats;
+
+    fn fake_run(lats_ms: &[f64]) -> RunResult {
+        RunResult {
+            latencies: lats_ms
+                .iter()
+                .enumerate()
+                .map(|(i, &l)| (i as u64, (l * MS as f64) as Nanos))
+                .collect(),
+            makespan: crate::SEC,
+            busy: crate::SEC / 2,
+            node_execs: 10,
+            stats: PolicyStats::default(),
+        }
+    }
+
+    #[test]
+    fn aggregates_across_runs() {
+        let runs = vec![fake_run(&[1.0, 2.0, 3.0]), fake_run(&[3.0, 4.0, 5.0])];
+        let a = Aggregate::from_runs(&runs);
+        assert!((a.mean_latency_ms() - 3.0).abs() < 1e-9);
+        assert_eq!(a.pooled_ms.len(), 6);
+        assert!((a.mean_throughput() - 3.0).abs() < 1e-9);
+        let (lo, hi) = a.latency_p25_p75();
+        assert!(lo <= a.mean_latency_ms() && a.mean_latency_ms() <= hi);
+    }
+
+    #[test]
+    fn violation_rate_counts_over_deadline() {
+        let a = Aggregate::from_runs(&[fake_run(&[10.0, 30.0, 50.0, 70.0])]);
+        assert!((a.violation_rate(40 * MS) - 0.5).abs() < 1e-9);
+        assert_eq!(a.violation_rate(100 * MS), 0.0);
+        assert_eq!(a.violation_rate(MS), 1.0);
+    }
+
+    #[test]
+    fn cdf_monotone() {
+        let a = Aggregate::from_runs(&[fake_run(&[1.0, 2.0, 3.0, 4.0])]);
+        let c = a.cdf(&[0.5, 1.5, 2.5, 3.5, 4.5]);
+        for w in c.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+        assert_eq!(*c.last().unwrap(), 1.0);
+    }
+}

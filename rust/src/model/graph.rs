@@ -1,0 +1,234 @@
+//! Graph IR: node templates, node classes, and per-request programs.
+
+use crate::npu::GemmShape;
+
+/// Algorithm-1 node classes. `Static` nodes run once per inference;
+/// `Encoder`/`Decoder` nodes are the recursive layers of seq2seq models,
+/// unrolled per input/output token respectively (Fig. 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeClass {
+    Static,
+    Encoder,
+    Decoder,
+}
+
+/// A GEMM whose `m` dimension scales with the live batch size:
+/// `m = m_per_item × batch`. Convolutions are expressed in im2col form
+/// (`m_per_item = OH×OW`), fully-connected and per-token seq2seq steps
+/// have `m_per_item = 1`, padded-sequence attention blocks use
+/// `m_per_item = bucket_len`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GemmSpec {
+    pub m_per_item: usize,
+    pub k: usize,
+    pub n: usize,
+}
+
+impl GemmSpec {
+    pub const fn new(m_per_item: usize, k: usize, n: usize) -> GemmSpec {
+        GemmSpec { m_per_item, k, n }
+    }
+
+    /// Resolve to a concrete shape at the given batch size.
+    pub fn at_batch(&self, batch: usize) -> GemmShape {
+        GemmShape::new(self.m_per_item * batch, self.k, self.n)
+    }
+}
+
+/// One graph node (DNN layer or fused layer group).
+#[derive(Debug, Clone)]
+pub struct NodeTemplate {
+    pub name: &'static str,
+    pub class: NodeClass,
+    pub gemms: Vec<GemmSpec>,
+    /// Elementwise vector-op count per batch item (BN, ReLU, LayerNorm,
+    /// softmax, LSTM gates) — the non-matmul work of the node.
+    pub vec_elems_per_item: u64,
+}
+
+impl NodeTemplate {
+    pub fn stat(name: &'static str, gemms: Vec<GemmSpec>) -> NodeTemplate {
+        NodeTemplate {
+            name,
+            class: NodeClass::Static,
+            gemms,
+            vec_elems_per_item: 0,
+        }
+    }
+
+    pub fn enc(name: &'static str, gemms: Vec<GemmSpec>) -> NodeTemplate {
+        NodeTemplate {
+            name,
+            class: NodeClass::Encoder,
+            gemms,
+            vec_elems_per_item: 0,
+        }
+    }
+
+    pub fn dec(name: &'static str, gemms: Vec<GemmSpec>) -> NodeTemplate {
+        NodeTemplate {
+            name,
+            class: NodeClass::Decoder,
+            gemms,
+            vec_elems_per_item: 0,
+        }
+    }
+
+    /// Builder-style setter for the vector-op count.
+    pub fn with_vec(mut self, elems_per_item: u64) -> NodeTemplate {
+        self.vec_elems_per_item = elems_per_item;
+        self
+    }
+
+    pub fn macs_per_item(&self) -> u64 {
+        self.gemms.iter().map(|g| g.at_batch(1).macs()).sum()
+    }
+}
+
+/// A complete model: the paper's DAG, lowered to its serialized node-wise
+/// execution order (Fig. 1).
+#[derive(Debug, Clone)]
+pub struct ModelGraph {
+    pub name: &'static str,
+    pub nodes: Vec<NodeTemplate>,
+    /// Maximum supported sequence length for dynamic models (80 for the
+    /// translation benchmarks); 0 for static-topology models.
+    pub max_seq: usize,
+}
+
+impl ModelGraph {
+    /// Whether the graph has any unrolled (Encoder/Decoder) node.
+    pub fn is_dynamic(&self) -> bool {
+        self.nodes.iter().any(|n| n.class != NodeClass::Static)
+    }
+
+    /// Repeat count of node `i` for a request with the given input/output
+    /// sequence lengths.
+    pub fn repeats(&self, node_idx: usize, in_len: usize, out_len: usize) -> usize {
+        match self.nodes[node_idx].class {
+            NodeClass::Static => 1,
+            NodeClass::Encoder => in_len.max(1),
+            NodeClass::Decoder => out_len.max(1),
+        }
+    }
+
+    /// Total node *executions* for a single request (the unrolled program
+    /// length) — used for sanity checks and progress accounting.
+    pub fn program_len(&self, in_len: usize, out_len: usize) -> usize {
+        (0..self.nodes.len())
+            .map(|i| self.repeats(i, in_len, out_len))
+            .sum()
+    }
+
+    /// Total MACs for one inference at the given sequence lengths.
+    pub fn macs(&self, in_len: usize, out_len: usize) -> u64 {
+        self.nodes
+            .iter()
+            .enumerate()
+            .map(|(i, n)| n.macs_per_item() * self.repeats(i, in_len, out_len) as u64)
+            .sum()
+    }
+}
+
+/// Per-request execution cursor: which template node and which repeat step
+/// the request is at. Ordering is lexicographic (`tpos`, then `step`) —
+/// i.e. program order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Cursor {
+    pub tpos: usize,
+    pub step: usize,
+}
+
+impl Cursor {
+    pub const START: Cursor = Cursor { tpos: 0, step: 0 };
+
+    /// Advance one node execution. Returns `None` when the program is
+    /// complete.
+    pub fn advance(
+        self,
+        graph: &ModelGraph,
+        in_len: usize,
+        out_len: usize,
+    ) -> Option<Cursor> {
+        let rep = graph.repeats(self.tpos, in_len, out_len);
+        let mut c = self;
+        c.step += 1;
+        if c.step >= rep {
+            c.tpos += 1;
+            c.step = 0;
+            if c.tpos >= graph.nodes.len() {
+                return None;
+            }
+        }
+        Some(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> ModelGraph {
+        ModelGraph {
+            name: "toy",
+            nodes: vec![
+                NodeTemplate::stat("a", vec![GemmSpec::new(1, 8, 8)]),
+                NodeTemplate::enc("e", vec![GemmSpec::new(1, 8, 8)]),
+                NodeTemplate::dec("d", vec![GemmSpec::new(1, 8, 8)]),
+            ],
+            max_seq: 10,
+        }
+    }
+
+    #[test]
+    fn repeats_by_class() {
+        let g = toy();
+        assert_eq!(g.repeats(0, 5, 7), 1);
+        assert_eq!(g.repeats(1, 5, 7), 5);
+        assert_eq!(g.repeats(2, 5, 7), 7);
+        assert_eq!(g.program_len(5, 7), 13);
+    }
+
+    #[test]
+    fn zero_lengths_clamp_to_one() {
+        let g = toy();
+        assert_eq!(g.repeats(1, 0, 0), 1);
+        assert_eq!(g.repeats(2, 0, 0), 1);
+    }
+
+    #[test]
+    fn cursor_walks_whole_program() {
+        let g = toy();
+        let (in_len, out_len) = (3, 2);
+        let mut c = Some(Cursor::START);
+        let mut count = 0;
+        let mut seen = Vec::new();
+        while let Some(cur) = c {
+            seen.push(cur);
+            count += 1;
+            c = cur.advance(&g, in_len, out_len);
+            assert!(count <= 100, "runaway cursor");
+        }
+        assert_eq!(count, g.program_len(in_len, out_len));
+        // strictly increasing program order
+        for w in seen.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        assert_eq!(seen[0], Cursor::START);
+        assert_eq!(seen.last().unwrap().tpos, 2);
+    }
+
+    #[test]
+    fn gemm_batch_scaling() {
+        let g = GemmSpec::new(49, 64, 32);
+        assert_eq!(g.at_batch(4).m, 196);
+        assert_eq!(g.at_batch(1).macs(), 49 * 64 * 32);
+    }
+
+    #[test]
+    fn macs_scale_with_seq_len() {
+        let g = toy();
+        assert!(g.macs(10, 10) > g.macs(1, 1));
+        assert!(g.is_dynamic());
+    }
+}

@@ -1,0 +1,21 @@
+//! DNN graph IR and the paper's workload zoo.
+//!
+//! A model is a sequence of [`graph::NodeTemplate`]s — the paper's "graph
+//! nodes" (layer granularity). Static nodes execute once per inference;
+//! `Encoder` nodes repeat per input token and `Decoder` nodes per output
+//! token (the time-unrolling of Fig. 2 / Algorithm 1). A request's
+//! concrete *program* is the template with per-request repeat counts
+//! resolved from its sampled input/output sequence lengths.
+//!
+//! [`latency::LatencyTable`] memoizes `NodeLatency(node, batch)` from a
+//! [`crate::npu::CostModel`] — the paper's profiled per-node lookup table —
+//! and implements Algorithm 1 (`SingleInputExecTime`).
+
+pub mod graph;
+pub mod latency;
+pub mod workloads;
+
+pub use graph::{ModelGraph, NodeClass, NodeTemplate};
+pub use graph::NodeClass as GraphNodeClass;
+pub use latency::{LatencyTable, DEFAULT_MAX_BATCH, WMT_MEAN_IN, WMT_MEAN_OUT};
+pub use workloads::Workload;

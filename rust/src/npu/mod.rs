@@ -1,0 +1,74 @@
+//! Cycle-level accelerator cost models.
+//!
+//! The paper evaluates LazyBatching on a cycle-level NPU simulator modeled
+//! after Google's TPU (Table I: 128×128 systolic array @ 700 MHz, 8 MB
+//! activation + 4 MB weight SRAM, 8 memory channels, 100-cycle fixed
+//! memory latency, 360 GB/s). Following the paper's own simplification
+//! ("we modeled the memory system as having fixed latency and memory
+//! bandwidth"), [`systolic::SystolicModel`] is an analytic
+//! weight-stationary tiling model in the SCALE-Sim family rather than a
+//! per-cycle dataflow replay — what the batching policies consume is the
+//! *latency-vs-batch curve per node*, which this model reproduces.
+//!
+//! [`gpu::GpuModel`] is the substitute for the paper's CUDA/cuDNN Titan Xp
+//! prototype (§VI-C "LazyBatching for GPU-based inference systems"): same
+//! GEMM abstraction, GPU-like constants (higher peak, higher per-kernel
+//! launch overhead, poor low-batch utilization).
+
+pub mod gpu;
+pub mod systolic;
+
+use crate::Nanos;
+
+/// A concrete GEMM invocation: `[m,k] × [k,n]` with already-resolved
+/// batch-dependent `m`. Layer descriptions in [`crate::model`] expand to
+/// one or more of these per (node, batch size).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GemmShape {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+}
+
+impl GemmShape {
+    pub fn new(m: usize, k: usize, n: usize) -> GemmShape {
+        GemmShape { m, k, n }
+    }
+
+    /// Multiply-accumulate count.
+    pub fn macs(&self) -> u64 {
+        self.m as u64 * self.k as u64 * self.n as u64
+    }
+
+    /// Off-chip bytes touched assuming weights + input + output all move
+    /// through DRAM once (`dtype_bytes` per element).
+    pub fn bytes(&self, dtype_bytes: usize) -> u64 {
+        let d = dtype_bytes as u64;
+        (self.k as u64 * self.n as u64 + self.m as u64 * self.k as u64
+            + self.m as u64 * self.n as u64)
+            * d
+    }
+}
+
+/// Anything that can price a node's worth of GEMMs.
+pub trait CostModel: Send + Sync {
+    /// Latency of a single GEMM in nanoseconds.
+    fn gemm_time_ns(&self, g: GemmShape) -> Nanos;
+
+    /// Latency of `elems` elementwise vector operations (BN, ReLU,
+    /// LayerNorm, softmax, LSTM gates — the non-matmul part of a node).
+    fn vector_time_ns(&self, elems: u64) -> Nanos;
+
+    /// Per-node fixed dispatch overhead (runtime launch, DMA setup).
+    fn node_overhead_ns(&self) -> Nanos;
+
+    /// Latency of one *node* execution = Σ GEMMs + vector ops + overhead.
+    fn node_time_ns(&self, gemms: &[GemmShape], vec_elems: u64) -> Nanos {
+        gemms.iter().map(|&g| self.gemm_time_ns(g)).sum::<Nanos>()
+            + self.vector_time_ns(vec_elems)
+            + self.node_overhead_ns()
+    }
+
+    /// Human-readable name for reports.
+    fn name(&self) -> &'static str;
+}

@@ -1,0 +1,237 @@
+//! Analytic weight-stationary systolic-array cost model (Table I NPU).
+//!
+//! Model per GEMM `[m,k]×[k,n]` on a `R×C` array:
+//!
+//! * The weight matrix is tiled into `⌈k/R⌉ × ⌈n/C⌉` folds. For each fold
+//!   the array streams `m` activation rows through; the pipeline needs
+//!   `R + C` cycles of fill/drain and weight loads are double-buffered, so
+//!   a fold costs `max(m, R) + R + C` cycles (weight load is exposed only
+//!   when the stream is shorter than the array height).
+//! * Memory time is the paper's fixed-latency + bandwidth model:
+//!   `lat + bytes / BW`, where bytes counts weights once per node
+//!   execution plus input/output activations (batch-scaled). Weights do
+//!   **not** scale with batch — that asymmetry is exactly what makes
+//!   batching profitable and produces the Fig-3 saturation curve.
+//! * The node latency is `max(compute, memory)` (perfect double-buffered
+//!   overlap) plus a fixed per-node dispatch overhead.
+//!
+//! Calibration: the default [`NpuConfig`] reproduces Table II's
+//! single-batch latencies within ~10% (`bench tab02_single_latency`).
+
+use super::{CostModel, GemmShape};
+use crate::Nanos;
+
+/// Hardware parameters (paper Table I defaults).
+#[derive(Debug, Clone)]
+pub struct NpuConfig {
+    /// Systolic array rows (dot-product length direction).
+    pub rows: usize,
+    /// Systolic array columns (output-feature direction).
+    pub cols: usize,
+    /// Core frequency in GHz.
+    pub freq_ghz: f64,
+    /// Activation scratchpad bytes (8 MB).
+    pub act_sram_bytes: usize,
+    /// Weight scratchpad bytes (4 MB).
+    pub wgt_sram_bytes: usize,
+    /// DRAM bandwidth in GB/s (aggregate over 8 channels).
+    pub mem_bw_gbps: f64,
+    /// Fixed DRAM access latency in core cycles.
+    pub mem_latency_cycles: u64,
+    /// Element size in bytes (bf16).
+    pub dtype_bytes: usize,
+    /// Achievable fraction of ideal tiling throughput (dataflow stalls,
+    /// im2col skew, partial-tile bubbles not captured by the fold model).
+    pub compute_efficiency: f64,
+    /// Fixed per-node dispatch overhead in ns (runtime launch + DMA
+    /// descriptor setup; §VI-D says scheduling itself is O(1)/negligible,
+    /// this covers the hardware-visible launch path).
+    pub node_overhead_ns: Nanos,
+}
+
+impl Default for NpuConfig {
+    fn default() -> Self {
+        NpuConfig {
+            rows: 128,
+            cols: 128,
+            freq_ghz: 0.7,
+            act_sram_bytes: 8 << 20,
+            wgt_sram_bytes: 4 << 20,
+            mem_bw_gbps: 360.0,
+            mem_latency_cycles: 100,
+            dtype_bytes: 2,
+            compute_efficiency: 0.7,
+            node_overhead_ns: 2_000,
+        }
+    }
+}
+
+/// The Table-I NPU cost model.
+#[derive(Debug, Clone)]
+pub struct SystolicModel {
+    pub cfg: NpuConfig,
+}
+
+impl SystolicModel {
+    pub fn new(cfg: NpuConfig) -> SystolicModel {
+        SystolicModel { cfg }
+    }
+
+    pub fn default_npu() -> SystolicModel {
+        SystolicModel::new(NpuConfig::default())
+    }
+
+    #[inline]
+    fn cycles_to_ns(&self, cycles: f64) -> f64 {
+        cycles / self.cfg.freq_ghz
+    }
+
+    /// Compute-side cycles for one GEMM (SCALE-Sim weight-stationary
+    /// semantics, which the paper cross-validates its simulator against).
+    ///
+    /// Per fold: `R + C - 2` pipeline fill/drain cycles plus the
+    /// activation stream (`m` rows, degraded by `compute_efficiency`),
+    /// floored by the weight-FIFO refill rate (`R×C×dtype` bytes at DRAM
+    /// bandwidth, double-buffered). Fill/drain is *not* amortized across
+    /// folds — short streams leave the array mostly idle, which is the
+    /// low-batch inefficiency that makes batching pay (Fig. 3).
+    pub fn compute_cycles(&self, g: GemmShape) -> f64 {
+        if g.m == 0 || g.k == 0 || g.n == 0 {
+            return 0.0;
+        }
+        let folds = (g.k.div_ceil(self.cfg.rows) * g.n.div_ceil(self.cfg.cols)) as f64;
+        let fill_drain = (self.cfg.rows + self.cfg.cols - 2) as f64;
+        let bytes_per_cycle = self.cfg.mem_bw_gbps / self.cfg.freq_ghz;
+        let wload =
+            (self.cfg.rows * self.cfg.cols * self.cfg.dtype_bytes) as f64 / bytes_per_cycle;
+        folds * ((g.m as f64 / self.cfg.compute_efficiency).max(wload) + fill_drain)
+    }
+
+    /// Memory-side cycles for one GEMM (fixed latency + bandwidth).
+    pub fn memory_cycles(&self, g: GemmShape) -> f64 {
+        let bytes = g.bytes(self.cfg.dtype_bytes) as f64;
+        let bytes_per_cycle = self.cfg.mem_bw_gbps / self.cfg.freq_ghz; // GB/s ÷ Gcycles/s
+        self.cfg.mem_latency_cycles as f64 + bytes / bytes_per_cycle
+    }
+
+    /// Roofline utilization of the MXU for this GEMM in `[0,1]`
+    /// (useful-MACs ÷ peak-MACs over the modeled runtime).
+    pub fn mxu_utilization(&self, g: GemmShape) -> f64 {
+        let cycles = self.compute_cycles(g).max(self.memory_cycles(g));
+        if cycles == 0.0 {
+            return 0.0;
+        }
+        let peak_per_cycle = (self.cfg.rows * self.cfg.cols) as f64;
+        (g.macs() as f64 / cycles) / peak_per_cycle
+    }
+}
+
+impl CostModel for SystolicModel {
+    fn gemm_time_ns(&self, g: GemmShape) -> Nanos {
+        let cycles = self.compute_cycles(g).max(self.memory_cycles(g));
+        self.cycles_to_ns(cycles).round() as Nanos
+    }
+
+    fn vector_time_ns(&self, elems: u64) -> Nanos {
+        // 128-lane vector unit at core frequency (TPU VPU-style).
+        let cycles = elems as f64 / 128.0;
+        self.cycles_to_ns(cycles).round() as Nanos
+    }
+
+    fn node_overhead_ns(&self) -> Nanos {
+        self.cfg.node_overhead_ns
+    }
+
+    fn name(&self) -> &'static str {
+        "npu-systolic-128x128"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> SystolicModel {
+        SystolicModel::default_npu()
+    }
+
+    #[test]
+    fn zero_gemm_is_free() {
+        assert_eq!(model().compute_cycles(GemmShape::new(0, 128, 128)), 0.0);
+    }
+
+    #[test]
+    fn small_m_is_memory_or_fill_bound() {
+        // m=1 (batch-1 FC): loading k×n weights dominates; throughput per
+        // item must improve with batch.
+        let m = model();
+        let t1 = m.gemm_time_ns(GemmShape::new(1, 2048, 4096));
+        let t16 = m.gemm_time_ns(GemmShape::new(16, 2048, 4096));
+        // 16× the work for nearly the same time:
+        assert!(t16 < t1 * 2, "t1={t1} t16={t16}");
+    }
+
+    #[test]
+    fn large_m_scales_linearly() {
+        let m = model();
+        let t1 = m.gemm_time_ns(GemmShape::new(4096, 1024, 1024));
+        let t2 = m.gemm_time_ns(GemmShape::new(8192, 1024, 1024));
+        let ratio = t2 as f64 / t1 as f64;
+        assert!((1.7..=2.3).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn utilization_bounded_and_improves_with_m() {
+        let m = model();
+        let u1 = m.mxu_utilization(GemmShape::new(1, 1024, 1024));
+        let u128 = m.mxu_utilization(GemmShape::new(128, 1024, 1024));
+        let u4096 = m.mxu_utilization(GemmShape::new(4096, 1024, 1024));
+        assert!(u1 < u128 && u128 < u4096, "{u1} {u128} {u4096}");
+        assert!(u4096 <= 1.0 + 1e-9);
+        assert!(u4096 > 0.3, "large GEMM should be reasonably efficient: {u4096}");
+    }
+
+    #[test]
+    fn memory_model_matches_bandwidth() {
+        // Pure-bandwidth sanity: 360 bytes should take ~1 cycle of BW time
+        // at 360 GB/s & 0.7 GHz -> bytes_per_cycle = 514.3.
+        let m = model();
+        let g = GemmShape::new(128, 128, 128);
+        let bytes = g.bytes(2) as f64;
+        let expect = 100.0 + bytes / (360.0 / 0.7);
+        assert!((m.memory_cycles(g) - expect).abs() < 1e-6);
+    }
+
+    #[test]
+    fn node_time_sums_gemms_plus_overhead() {
+        let m = model();
+        let g = GemmShape::new(64, 512, 512);
+        let one = m.gemm_time_ns(g);
+        let node = m.node_time_ns(&[g, g, g], 128_000);
+        assert_eq!(node, 3 * one + m.vector_time_ns(128_000) + m.node_overhead_ns());
+        assert!(m.vector_time_ns(128_000) > 0);
+    }
+
+    #[test]
+    fn throughput_saturates_with_batch_fig3_shape() {
+        // Reproduce the qualitative Fig-3 curve on a conv-like GEMM:
+        // throughput (items/s) rises then levels out.
+        let m = model();
+        let mut prev_tput = 0.0;
+        let mut gain_at_32 = 0.0;
+        for &b in &[1usize, 2, 4, 8, 16, 32, 64] {
+            let g = GemmShape::new(49 * b, 1152, 256);
+            let t = m.gemm_time_ns(g) as f64;
+            let tput = b as f64 / t;
+            assert!(tput >= prev_tput * 0.99, "tput must not regress: b={b}");
+            if b == 32 {
+                gain_at_32 = tput;
+            }
+            if b == 64 {
+                // saturation: 64 gains little over 32
+                assert!(tput / gain_at_32 < 1.5);
+            }
+            prev_tput = tput;
+        }
+    }
+}

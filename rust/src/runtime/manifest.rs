@@ -1,0 +1,255 @@
+//! Artifact manifest parsing (line-based; see `python/compile/aot.py`).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// One graph node of the AOT-compiled serving model.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NodeInfo {
+    pub idx: usize,
+    pub name: String,
+    /// `"tokens"` (`i32[b,seq]`) or `"act"` (`f32[b,seq,d]`).
+    pub in_kind: String,
+    /// `"act"` or `"logits"` (`f32[b,vocab]`).
+    pub out_kind: String,
+}
+
+/// Parsed `manifest.txt`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: String,
+    pub seq: usize,
+    pub dmodel: usize,
+    pub vocab: usize,
+    pub batches: Vec<usize>,
+    pub nodes: Vec<NodeInfo>,
+    /// `(node idx, batch) -> artifact path`.
+    pub files: HashMap<(usize, usize), PathBuf>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load and validate `dir/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let mut model = String::new();
+        let (mut seq, mut dmodel, mut vocab, mut n_nodes) = (0usize, 0usize, 0usize, 0usize);
+        let mut batches = Vec::new();
+        let mut nodes: Vec<NodeInfo> = Vec::new();
+        let mut files = HashMap::new();
+
+        for (ln, line) in text.lines().enumerate() {
+            let mut it = line.split_whitespace();
+            let Some(tag) = it.next() else { continue };
+            let ctx = || format!("manifest line {}: '{line}'", ln + 1);
+            match tag {
+                "model" => model = it.next().with_context(ctx)?.to_string(),
+                "seq" => seq = it.next().with_context(ctx)?.parse().with_context(ctx)?,
+                "dmodel" => dmodel = it.next().with_context(ctx)?.parse().with_context(ctx)?,
+                "vocab" => vocab = it.next().with_context(ctx)?.parse().with_context(ctx)?,
+                "nodes" => n_nodes = it.next().with_context(ctx)?.parse().with_context(ctx)?,
+                "batches" => {
+                    batches = it
+                        .map(|b| b.parse::<usize>())
+                        .collect::<Result<_, _>>()
+                        .with_context(ctx)?;
+                }
+                "node" => {
+                    let idx: usize = it.next().with_context(ctx)?.parse().with_context(ctx)?;
+                    let name = it.next().with_context(ctx)?.to_string();
+                    let in_kind = it.next().with_context(ctx)?.to_string();
+                    let out_kind = it.next().with_context(ctx)?.to_string();
+                    if idx != nodes.len() {
+                        bail!("node entries out of order at line {}", ln + 1);
+                    }
+                    nodes.push(NodeInfo {
+                        idx,
+                        name,
+                        in_kind,
+                        out_kind,
+                    });
+                }
+                "file" => {
+                    let idx: usize = it.next().with_context(ctx)?.parse().with_context(ctx)?;
+                    let b: usize = it.next().with_context(ctx)?.parse().with_context(ctx)?;
+                    let fname = it.next().with_context(ctx)?;
+                    files.insert((idx, b), dir.join(fname));
+                }
+                _ => bail!("unknown manifest tag '{tag}' at line {}", ln + 1),
+            }
+        }
+
+        if nodes.len() != n_nodes {
+            bail!("manifest declares {n_nodes} nodes, found {}", nodes.len());
+        }
+        if batches.is_empty() {
+            bail!("manifest has no batch sizes");
+        }
+        for node in &nodes {
+            for &b in &batches {
+                if !files.contains_key(&(node.idx, b)) {
+                    bail!("missing artifact for node {} batch {b}", node.idx);
+                }
+            }
+        }
+        Ok(Manifest {
+            model,
+            seq,
+            dmodel,
+            vocab,
+            batches,
+            nodes,
+            files,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Largest compiled batch size ≤ `want` (callers split bigger groups).
+    pub fn best_batch(&self, want: usize) -> usize {
+        self.batches
+            .iter()
+            .copied()
+            .filter(|&b| b <= want.max(1))
+            .max()
+            .unwrap_or_else(|| *self.batches.iter().min().unwrap())
+    }
+}
+
+/// Parsed `golden.txt` (end-to-end numerics reference from jax).
+#[derive(Debug, Clone)]
+pub struct Golden {
+    pub batch: usize,
+    pub tokens: Vec<i32>,
+    pub logits: Vec<f32>,
+}
+
+impl Golden {
+    pub fn load(dir: &Path) -> Result<Golden> {
+        let text = std::fs::read_to_string(dir.join("golden.txt"))?;
+        let mut batch = 0usize;
+        let mut tokens = Vec::new();
+        let mut logits = Vec::new();
+        for line in text.lines() {
+            let mut it = line.split_whitespace();
+            match it.next() {
+                Some("batch") => batch = it.next().context("batch value")?.parse()?,
+                Some("tokens") => {
+                    tokens = it.map(|t| t.parse::<i32>()).collect::<Result<_, _>>()?
+                }
+                Some("logits") => {
+                    logits = it.map(|t| t.parse::<f32>()).collect::<Result<_, _>>()?
+                }
+                _ => {}
+            }
+        }
+        if batch == 0 || tokens.is_empty() || logits.is_empty() {
+            bail!("golden.txt incomplete");
+        }
+        Ok(Golden {
+            batch,
+            tokens,
+            logits,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        let mut f = std::fs::File::create(dir.join("manifest.txt")).unwrap();
+        f.write_all(body.as_bytes()).unwrap();
+    }
+
+    fn touch(dir: &Path, name: &str) {
+        std::fs::File::create(dir.join(name)).unwrap();
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("lb_manifest_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn parses_valid_manifest() {
+        let d = tmpdir("ok");
+        write_manifest(
+            &d,
+            "model m\nseq 16\ndmodel 128\nvocab 256\nbatches 1 2\nnodes 2\n\
+             node 0 embed tokens act\nnode 1 head act logits\n\
+             file 0 1 a.hlo.txt\nfile 0 2 b.hlo.txt\nfile 1 1 c.hlo.txt\nfile 1 2 d.hlo.txt\n",
+        );
+        for f in ["a.hlo.txt", "b.hlo.txt", "c.hlo.txt", "d.hlo.txt"] {
+            touch(&d, f);
+        }
+        let m = Manifest::load(&d).unwrap();
+        assert_eq!(m.model, "m");
+        assert_eq!(m.seq, 16);
+        assert_eq!(m.nodes.len(), 2);
+        assert_eq!(m.nodes[0].in_kind, "tokens");
+        assert_eq!(m.batches, vec![1, 2]);
+        assert!(m.files.contains_key(&(1, 2)));
+    }
+
+    #[test]
+    fn missing_artifact_is_an_error() {
+        let d = tmpdir("missing");
+        write_manifest(
+            &d,
+            "model m\nseq 4\ndmodel 8\nvocab 16\nbatches 1\nnodes 1\n\
+             node 0 embed tokens logits\n",
+        );
+        let err = Manifest::load(&d).unwrap_err();
+        assert!(err.to_string().contains("missing artifact"), "{err}");
+    }
+
+    #[test]
+    fn unknown_tag_rejected() {
+        let d = tmpdir("tag");
+        write_manifest(&d, "bogus 1\n");
+        assert!(Manifest::load(&d).is_err());
+    }
+
+    #[test]
+    fn best_batch_selection() {
+        let d = tmpdir("bb");
+        write_manifest(
+            &d,
+            "model m\nseq 4\ndmodel 8\nvocab 16\nbatches 1 2 4 8\nnodes 1\n\
+             node 0 embed tokens logits\n\
+             file 0 1 a\nfile 0 2 b\nfile 0 4 c\nfile 0 8 d\n",
+        );
+        for f in ["a", "b", "c", "d"] {
+            touch(&d, f);
+        }
+        let m = Manifest::load(&d).unwrap();
+        assert_eq!(m.best_batch(1), 1);
+        assert_eq!(m.best_batch(3), 2);
+        assert_eq!(m.best_batch(8), 8);
+        assert_eq!(m.best_batch(100), 8);
+        assert_eq!(m.best_batch(0), 1);
+    }
+
+    #[test]
+    fn golden_parses() {
+        let d = tmpdir("golden");
+        std::fs::write(
+            d.join("golden.txt"),
+            "batch 2\ntokens 1 2 3 4\nlogits 0.5 -1.25e-1\n",
+        )
+        .unwrap();
+        let g = Golden::load(&d).unwrap();
+        assert_eq!(g.batch, 2);
+        assert_eq!(g.tokens, vec![1, 2, 3, 4]);
+        assert_eq!(g.logits.len(), 2);
+        assert!((g.logits[1] + 0.125).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,20 @@
+//! PJRT runtime: the real execution path.
+//!
+//! `python/compile/aot.py` lowers every (node, batch size) pair of the
+//! serving model to an HLO-text artifact; this module loads them into a
+//! PJRT CPU client and exposes node-level execution to the coordinator.
+//! Python never runs here — the rust binary is self-contained once
+//! `make artifacts` has been run.
+//!
+//! * [`manifest`] — parses `manifest.txt` / `golden.txt` (line format, no
+//!   serde in the offline image).
+//! * [`registry`] — compiles and caches one executable per (node, batch);
+//!   stacks per-request activations into batched literals and back, which
+//!   is exactly the batch merge/split primitive LazyBatching's node-level
+//!   scheduling needs.
+
+pub mod manifest;
+pub mod registry;
+
+pub use manifest::{Golden, Manifest, NodeInfo};
+pub use registry::{Activation, NodeRegistry};

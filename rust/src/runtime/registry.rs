@@ -1,0 +1,221 @@
+//! Node-executable registry: one compiled PJRT executable per
+//! (graph node, batch size), plus the activation stack/unstack primitives
+//! the node-level scheduler uses to merge and split batches.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::Manifest;
+
+/// Per-request activation buffer travelling between nodes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Activation {
+    /// Input tokens (node 0 input): `i32[seq]` per request.
+    Tokens(Vec<i32>),
+    /// Hidden activations: `f32[seq × dmodel]` per request.
+    Act(Vec<f32>),
+    /// Final logits: `f32[vocab]` per request.
+    Logits(Vec<f32>),
+}
+
+impl Activation {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Activation::Tokens(_) => "tokens",
+            Activation::Act(_) => "act",
+            Activation::Logits(_) => "logits",
+        }
+    }
+}
+
+/// Loaded executables for every (node, batch) pair of one model.
+pub struct NodeRegistry {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    execs: HashMap<(usize, usize), xla::PjRtLoadedExecutable>,
+}
+
+impl NodeRegistry {
+    /// Compile every artifact in `dir` on the PJRT CPU client.
+    pub fn load(dir: &Path) -> Result<NodeRegistry> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut execs = HashMap::new();
+        for (&(node, batch), path) in &manifest.files {
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?;
+            execs.insert((node, batch), exe);
+        }
+        Ok(NodeRegistry {
+            manifest,
+            client,
+            execs,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute node `node_idx` over the given per-request activations
+    /// (all of the same kind), returning per-request outputs.
+    ///
+    /// The inputs are stacked along the batch dimension into one literal,
+    /// run through the (node, batch)-specific executable, and the output
+    /// is split back per request — the concrete realization of
+    /// LazyBatching's merge-at-a-common-node primitive. If the group size
+    /// has no compiled executable, it is served in chunks of the largest
+    /// compiled batch (callers should size groups to compiled batches for
+    /// best performance).
+    pub fn execute_node(
+        &self,
+        node_idx: usize,
+        inputs: &[&Activation],
+    ) -> Result<Vec<Activation>> {
+        if inputs.is_empty() {
+            bail!("empty batch");
+        }
+        let want = inputs.len();
+        let b = self.manifest.best_batch(want);
+        if b == want {
+            return self.execute_exact(node_idx, inputs);
+        }
+        // chunk: largest compiled batch per pass (padding would also work
+        // but wastes compute; chunking keeps numerics exact)
+        let mut out = Vec::with_capacity(want);
+        let mut off = 0;
+        while off < want {
+            let chunk = self.manifest.best_batch(want - off);
+            out.extend(self.execute_exact(node_idx, &inputs[off..off + chunk])?);
+            off += chunk;
+        }
+        Ok(out)
+    }
+
+    fn execute_exact(&self, node_idx: usize, inputs: &[&Activation]) -> Result<Vec<Activation>> {
+        let b = inputs.len();
+        let exe = self
+            .execs
+            .get(&(node_idx, b))
+            .with_context(|| format!("no executable for node {node_idx} batch {b}"))?;
+        let info = &self.manifest.nodes[node_idx];
+        let seq = self.manifest.seq;
+        let d = self.manifest.dmodel;
+        let vocab = self.manifest.vocab;
+
+        // ---- stack per-request buffers into one batched literal ----
+        let input_lit = match info.in_kind.as_str() {
+            "tokens" => {
+                let mut flat: Vec<i32> = Vec::with_capacity(b * seq);
+                for a in inputs {
+                    match a {
+                        Activation::Tokens(t) if t.len() == seq => flat.extend_from_slice(t),
+                        other => bail!(
+                            "node {node_idx} expects tokens[{seq}], got {}",
+                            other.kind()
+                        ),
+                    }
+                }
+                xla::Literal::vec1(&flat).reshape(&[b as i64, seq as i64])?
+            }
+            "act" => {
+                let mut flat: Vec<f32> = Vec::with_capacity(b * seq * d);
+                for a in inputs {
+                    match a {
+                        Activation::Act(x) if x.len() == seq * d => flat.extend_from_slice(x),
+                        other => bail!(
+                            "node {node_idx} expects act[{}], got {}",
+                            seq * d,
+                            other.kind()
+                        ),
+                    }
+                }
+                xla::Literal::vec1(&flat).reshape(&[b as i64, seq as i64, d as i64])?
+            }
+            k => bail!("unknown input kind {k}"),
+        };
+
+        // ---- run ----
+        let result = exe.execute::<xla::Literal>(&[input_lit])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?; // aot.py lowers with return_tuple=True
+
+        // ---- split back per request ----
+        let flat: Vec<f32> = out.to_vec::<f32>()?;
+        let per = match info.out_kind.as_str() {
+            "act" => seq * d,
+            "logits" => vocab,
+            k => bail!("unknown output kind {k}"),
+        };
+        if flat.len() != b * per {
+            bail!(
+                "node {node_idx} output length {} != batch {b} × {per}",
+                flat.len()
+            );
+        }
+        Ok(flat
+            .chunks(per)
+            .map(|c| match info.out_kind.as_str() {
+                "act" => Activation::Act(c.to_vec()),
+                _ => Activation::Logits(c.to_vec()),
+            })
+            .collect())
+    }
+
+    /// Run one request (or a co-batched group) through the whole graph —
+    /// the simple whole-graph path used by tests and warmup.
+    pub fn run_program(&self, token_inputs: &[Vec<i32>]) -> Result<Vec<Vec<f32>>> {
+        let mut acts: Vec<Activation> = token_inputs
+            .iter()
+            .map(|t| Activation::Tokens(t.clone()))
+            .collect();
+        for node in 0..self.manifest.nodes.len() {
+            let refs: Vec<&Activation> = acts.iter().collect();
+            acts = self.execute_node(node, &refs)?;
+        }
+        acts.into_iter()
+            .map(|a| match a {
+                Activation::Logits(l) => Ok(l),
+                other => bail!("program ended with {}", other.kind()),
+            })
+            .collect()
+    }
+
+    /// Wall-clock profile of every (node, batch) executable — the real
+    ///-execution analogue of the paper's per-node latency lookup table.
+    pub fn profile(&self, reps: usize) -> Result<HashMap<(usize, usize), crate::Nanos>> {
+        let seq = self.manifest.seq;
+        let d = self.manifest.dmodel;
+        let mut table = HashMap::new();
+        for node in 0..self.manifest.nodes.len() {
+            for &b in &self.manifest.batches {
+                let inputs: Vec<Activation> = (0..b)
+                    .map(|i| {
+                        if self.manifest.nodes[node].in_kind == "tokens" {
+                            Activation::Tokens(vec![(i % 200) as i32; seq])
+                        } else {
+                            Activation::Act(vec![0.1; seq * d])
+                        }
+                    })
+                    .collect();
+                let refs: Vec<&Activation> = inputs.iter().collect();
+                // warmup
+                self.execute_node(node, &refs)?;
+                let start = std::time::Instant::now();
+                for _ in 0..reps.max(1) {
+                    self.execute_node(node, &refs)?;
+                }
+                let ns = start.elapsed().as_nanos() as u64 / reps.max(1) as u64;
+                table.insert((node, b), ns);
+            }
+        }
+        Ok(table)
+    }
+}

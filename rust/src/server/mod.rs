@@ -1,0 +1,8 @@
+//! Real serving front-end over the PJRT runtime.
+
+pub mod real;
+
+pub use real::{
+    measured_table, serve_trace, serving_graph, ServeConfig, ServePolicy, ServeReport,
+    ServeRequest,
+};

@@ -1,0 +1,297 @@
+//! Real-execution serving loop (the §VI-D software-prototype analogue).
+//!
+//! Requests flow through an mpsc channel into a scheduler thread that
+//! drives the *same* [`LazyBatching`] policy used in simulation — but
+//! against the wall clock and the PJRT [`NodeRegistry`]: node executions
+//! are real XLA computations, preemption happens at real layer
+//! boundaries, and batch merging stacks real activation buffers. Python
+//! is never involved.
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::policy::{Action, Batcher, Completion, ReqId, Reqs, Transition};
+use crate::coordinator::{GraphBatching, LazyBatching, Serial, SlackMode};
+use crate::model::graph::{GemmSpec, ModelGraph, NodeTemplate};
+use crate::model::LatencyTable;
+use crate::runtime::{Activation, NodeRegistry};
+use crate::traffic::RequestSpec;
+use crate::util::stats::Summary;
+use crate::Nanos;
+
+/// A request submitted to the real server.
+#[derive(Debug, Clone)]
+pub struct ServeRequest {
+    pub tokens: Vec<i32>,
+}
+
+/// Serving policy selector for the real path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServePolicy {
+    Lazy,
+    GraphB { btw_ms: u64 },
+    Serial,
+}
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub policy: ServePolicy,
+    pub sla: Nanos,
+    pub max_batch: usize,
+    /// Profiling repetitions per (node, batch) at startup.
+    pub profile_reps: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            policy: ServePolicy::Lazy,
+            sla: 100 * crate::MS,
+            max_batch: 8,
+            profile_reps: 3,
+        }
+    }
+}
+
+/// Outcome of serving one request stream.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub latencies_ms: Vec<f64>,
+    pub makespan_ms: f64,
+    pub node_execs: u64,
+    pub merges: u64,
+    pub preemptions: u64,
+    /// Per-request logits (index = submission order).
+    pub outputs: Vec<Vec<f32>>,
+}
+
+impl ServeReport {
+    pub fn summary(&self) -> Summary {
+        Summary::of(&self.latencies_ms)
+    }
+
+    pub fn throughput(&self) -> f64 {
+        if self.makespan_ms == 0.0 {
+            return 0.0;
+        }
+        self.latencies_ms.len() as f64 / (self.makespan_ms / 1e3)
+    }
+}
+
+/// Build the serving model's [`ModelGraph`] view (all static nodes; the
+/// GEMM specs are unused on the real path — latencies are measured).
+pub fn serving_graph(registry: &NodeRegistry) -> ModelGraph {
+    let nodes = registry
+        .manifest
+        .nodes
+        .iter()
+        .map(|n| {
+            // leak the name: NodeTemplate carries &'static str and the
+            // graph lives for the process lifetime on the real path
+            let name: &'static str = Box::leak(n.name.clone().into_boxed_str());
+            NodeTemplate::stat(name, vec![GemmSpec::new(1, 1, 1)])
+        })
+        .collect();
+    ModelGraph {
+        name: "minifmr",
+        nodes,
+        max_seq: 0,
+    }
+}
+
+/// Measure the real per-(node, batch) latency table, expanding to every
+/// batch in `1..=max_batch` by chunk decomposition (the registry serves
+/// uncompiled batch sizes in chunks of compiled ones).
+pub fn measured_table(
+    registry: &NodeRegistry,
+    graph: Arc<ModelGraph>,
+    max_batch: usize,
+    reps: usize,
+) -> Result<Arc<LatencyTable>> {
+    let prof = registry.profile(reps)?;
+    let mut rows = Vec::with_capacity(graph.nodes.len());
+    for node in 0..graph.nodes.len() {
+        let mut row = Vec::with_capacity(max_batch);
+        for want in 1..=max_batch {
+            // chunk decomposition mirrors NodeRegistry::execute_node
+            let mut total: Nanos = 0;
+            let mut off = 0;
+            while off < want {
+                let chunk = registry.manifest.best_batch(want - off);
+                total += *prof
+                    .get(&(node, chunk))
+                    .context("profile missing entry")?;
+                off += chunk;
+            }
+            row.push(total);
+        }
+        rows.push(row);
+    }
+    Ok(Arc::new(LatencyTable::from_rows(graph, rows, max_batch)))
+}
+
+/// Serve a timed request stream (pairs of arrival-offset and request)
+/// through the real PJRT execution path. Blocks until every response has
+/// been produced; returns per-request latency and the raw outputs.
+pub fn serve_trace(
+    registry: &NodeRegistry,
+    cfg: &ServeConfig,
+    trace: &[(Nanos, ServeRequest)],
+) -> Result<ServeReport> {
+    let graph = Arc::new(serving_graph(registry));
+    let table = measured_table(registry, graph.clone(), cfg.max_batch, cfg.profile_reps)?;
+
+    let mut policy: Box<dyn Batcher> = match cfg.policy {
+        ServePolicy::Lazy => Box::new(LazyBatching::new(
+            table.clone(),
+            cfg.sla,
+            1,
+            SlackMode::Conservative,
+            cfg.max_batch,
+        )),
+        ServePolicy::GraphB { btw_ms } => Box::new(GraphBatching::new(
+            graph.clone(),
+            btw_ms * crate::MS,
+            cfg.max_batch,
+        )),
+        ServePolicy::Serial => Box::new(Serial::new()),
+    };
+
+    // ---- request generator thread ----
+    let (tx, rx) = mpsc::channel::<(u64, Vec<i32>)>();
+    let gen_trace: Vec<(Nanos, Vec<i32>)> = trace
+        .iter()
+        .map(|(t, r)| (*t, r.tokens.clone()))
+        .collect();
+    let generator = std::thread::spawn(move || {
+        let start = Instant::now();
+        for (i, (at, tokens)) in gen_trace.into_iter().enumerate() {
+            let target = Duration::from_nanos(at);
+            if let Some(wait) = target.checked_sub(start.elapsed()) {
+                std::thread::sleep(wait);
+            }
+            if tx.send((i as u64, tokens)).is_err() {
+                return;
+            }
+        }
+    });
+
+    // ---- scheduler loop (this thread owns the processor) ----
+    let start = Instant::now();
+    let total = trace.len();
+    let mut reqs = Reqs::default();
+    let mut store: HashMap<ReqId, Activation> = HashMap::new();
+    let mut outputs: Vec<Vec<f32>> = vec![Vec::new(); total];
+    let mut latencies = vec![0.0f64; total];
+    let mut released_count = 0usize;
+    let mut node_execs = 0u64;
+
+    let now_ns = |start: &Instant| start.elapsed().as_nanos() as Nanos;
+
+    while released_count < total {
+        // ingest every request that has arrived
+        while let Ok((id, tokens)) = rx.try_recv() {
+            let now = now_ns(&start);
+            reqs.insert(RequestSpec {
+                id,
+                arrival: now,
+                in_len: 1,
+                out_len: 1,
+                model_idx: 0,
+            });
+            store.insert(id, Activation::Tokens(tokens));
+            policy.on_arrival(now, &reqs, id);
+        }
+
+        let now = now_ns(&start);
+        match policy.next_action(now, &reqs) {
+            Action::Execute(exec) => {
+                // gather, run, scatter
+                let inputs: Vec<&Activation> = exec
+                    .reqs
+                    .iter()
+                    .map(|id| store.get(id).expect("activation missing"))
+                    .collect();
+                let outs = registry.execute_node(exec.tpos, &inputs)?;
+                node_execs += 1;
+                let mut transitions = Vec::with_capacity(exec.reqs.len());
+                for (&id, out) in exec.reqs.iter().zip(outs) {
+                    store.insert(id, out);
+                    let st = reqs.get_mut(id);
+                    match st.cursor.advance(&graph, 1, 1) {
+                        Some(c) => {
+                            st.cursor = c;
+                            transitions.push(Transition::Advanced);
+                        }
+                        None => {
+                            st.done = true;
+                            transitions.push(Transition::Finished);
+                        }
+                    }
+                }
+                let done_at = now_ns(&start);
+                let mut released = Vec::new();
+                policy.on_complete(
+                    done_at,
+                    &reqs,
+                    &Completion { exec, transitions },
+                    &mut released,
+                );
+                for id in released {
+                    let st = reqs.get_mut(id);
+                    st.released = true;
+                    latencies[id as usize] =
+                        (done_at - st.spec.arrival) as f64 / crate::MS as f64;
+                    if let Some(Activation::Logits(l)) = store.remove(&id) {
+                        outputs[id as usize] = l;
+                    }
+                    released_count += 1;
+                }
+            }
+            Action::Sleep { until } => {
+                // block for the next arrival (or the policy's deadline)
+                let timeout = match until {
+                    Some(u) => Duration::from_nanos(u.saturating_sub(now).max(100_000)),
+                    None => Duration::from_millis(50),
+                };
+                match rx.recv_timeout(timeout) {
+                    Ok((id, tokens)) => {
+                        let t = now_ns(&start);
+                        reqs.insert(RequestSpec {
+                            id,
+                            arrival: t,
+                            in_len: 1,
+                            out_len: 1,
+                            model_idx: 0,
+                        });
+                        store.insert(id, Activation::Tokens(tokens));
+                        policy.on_arrival(t, &reqs, id);
+                    }
+                    Err(mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        anyhow::ensure!(
+                            reqs.len() == total,
+                            "generator died before sending all requests"
+                        );
+                    }
+                }
+            }
+        }
+    }
+    generator.join().ok();
+
+    let stats = policy.stats();
+    Ok(ServeReport {
+        latencies_ms: latencies,
+        makespan_ms: start.elapsed().as_nanos() as f64 / 1e6,
+        node_execs,
+        merges: stats.merges,
+        preemptions: stats.preemptions,
+        outputs,
+    })
+}

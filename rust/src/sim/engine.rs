@@ -1,0 +1,444 @@
+//! The node-granularity discrete-event engine.
+//!
+//! Three event sources — request arrivals (pre-sorted in the trace), the
+//! in-flight node completion, and a policy-requested timer — are merged by
+//! taking the earliest; no heap is needed. Each node execution occupies
+//! the processor for `NodeLatency(node, batch)` (from the profiled
+//! [`LatencyTable`]), after which member cursors advance and the policy is
+//! consulted again. This is exactly the paper's execution model: nodes are
+//! indivisible, scheduling happens at layer boundaries only.
+
+use std::sync::Arc;
+
+use crate::coordinator::policy::{
+    Action, Batcher, Completion, Exec, PolicyStats, ReqId, Reqs, Transition,
+};
+use crate::model::LatencyTable;
+use crate::traffic::Trace;
+use crate::Nanos;
+
+/// Engine configuration.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Model-allowed maximum batch size (engine-enforced upper bound on
+    /// any single node execution).
+    pub max_batch: usize,
+    /// Hard wall on simulated time (guards against stuck policies).
+    pub max_sim_time: Nanos,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            max_batch: 64,
+            max_sim_time: 3_600 * crate::SEC,
+        }
+    }
+}
+
+/// Outcome of one simulation run.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    /// `(request id, latency ns)` per released request, in release order.
+    pub latencies: Vec<(ReqId, Nanos)>,
+    /// Virtual time when the last response left the server.
+    pub makespan: Nanos,
+    /// Total processor-busy virtual time.
+    pub busy: Nanos,
+    /// Node executions issued.
+    pub node_execs: u64,
+    /// Policy-side counters.
+    pub stats: PolicyStats,
+}
+
+impl RunResult {
+    /// Completed requests per second of makespan.
+    pub fn throughput(&self) -> f64 {
+        if self.makespan == 0 {
+            return 0.0;
+        }
+        self.latencies.len() as f64 / (self.makespan as f64 / crate::SEC as f64)
+    }
+
+    /// Latencies in milliseconds.
+    pub fn latencies_ms(&self) -> Vec<f64> {
+        self.latencies
+            .iter()
+            .map(|&(_, l)| l as f64 / crate::MS as f64)
+            .collect()
+    }
+
+    /// Fraction of requests whose latency exceeded `sla` ns.
+    pub fn violation_rate(&self, sla: Nanos) -> f64 {
+        if self.latencies.is_empty() {
+            return 0.0;
+        }
+        let v = self.latencies.iter().filter(|&&(_, l)| l > sla).count();
+        v as f64 / self.latencies.len() as f64
+    }
+
+    /// Processor utilization over the makespan.
+    pub fn utilization(&self) -> f64 {
+        if self.makespan == 0 {
+            return 0.0;
+        }
+        self.busy as f64 / self.makespan as f64
+    }
+}
+
+/// The engine. One instance runs one trace against one policy.
+pub struct SimEngine {
+    /// Per-model latency tables (index = `RequestSpec::model_idx`).
+    tables: Vec<Arc<LatencyTable>>,
+    cfg: SimConfig,
+}
+
+impl SimEngine {
+    pub fn new(tables: Vec<Arc<LatencyTable>>, cfg: SimConfig) -> SimEngine {
+        assert!(!tables.is_empty());
+        SimEngine { tables, cfg }
+    }
+
+    pub fn single(table: Arc<LatencyTable>, cfg: SimConfig) -> SimEngine {
+        SimEngine::new(vec![table], cfg)
+    }
+
+    /// Run `trace` to completion under `policy`.
+    pub fn run(&self, trace: &Trace, policy: &mut dyn Batcher) -> RunResult {
+        let total = trace.requests.len();
+        let mut reqs = Reqs::default();
+        let mut next_arrival = 0usize;
+        let mut busy: Option<(Exec, Nanos, Nanos)> = None; // (exec, start, end)
+        let mut timer: Option<Nanos> = None;
+        let mut now: Nanos = 0;
+        let mut released_count = 0usize;
+        let mut latencies: Vec<(ReqId, Nanos)> = Vec::with_capacity(total);
+        let mut busy_total: Nanos = 0;
+        let mut node_execs = 0u64;
+        let mut makespan = 0;
+
+        while released_count < total {
+            // ---- pick the earliest event ----
+            let t_arr = trace.requests.get(next_arrival).map(|r| r.arrival);
+            let t_cmp = busy.as_ref().map(|&(_, _, end)| end);
+            let t_tmr = timer;
+            let next = [t_cmp, t_arr, t_tmr].into_iter().flatten().min();
+            let Some(t) = next else {
+                panic!(
+                    "policy stalled: {} of {total} requests unreleased, no \
+                     pending events (policy={})",
+                    total - released_count,
+                    policy.name()
+                );
+            };
+            assert!(t >= now, "time went backwards");
+            now = t;
+            assert!(
+                now <= self.cfg.max_sim_time,
+                "simulation exceeded max_sim_time (stuck policy?)"
+            );
+
+            // ---- dispatch (completion first on ties: frees the processor) ----
+            if t_cmp == Some(now) {
+                let (exec, start, _end) = busy.take().unwrap();
+                busy_total += now - start;
+                let transitions = self.advance_cursors(&mut reqs, &exec);
+                let completion = Completion { exec, transitions };
+                let mut released = Vec::new();
+                policy.on_complete(now, &reqs, &completion, &mut released);
+                for id in released {
+                    let st = reqs.get_mut(id);
+                    assert!(st.done, "policy released unfinished request {id}");
+                    assert!(!st.released, "double release of request {id}");
+                    st.released = true;
+                    latencies.push((id, now - st.spec.arrival));
+                    released_count += 1;
+                    makespan = now;
+                }
+            } else if t_arr == Some(now) {
+                let spec = trace.requests[next_arrival];
+                next_arrival += 1;
+                reqs.insert(spec);
+                policy.on_arrival(now, &reqs, spec.id);
+            } else {
+                timer = None;
+                policy.on_timer(now, &reqs);
+            }
+
+            // ---- drive the processor when idle ----
+            if busy.is_none() && released_count < total {
+                match policy.next_action(now, &reqs) {
+                    Action::Execute(exec) => {
+                        self.validate_exec(&reqs, &exec);
+                        let model = reqs.get(exec.reqs[0]).spec.model_idx;
+                        let lat =
+                            self.tables[model].node_latency(exec.tpos, exec.reqs.len());
+                        for &id in &exec.reqs {
+                            let st = reqs.get_mut(id);
+                            if st.first_issue.is_none() {
+                                st.first_issue = Some(now);
+                            }
+                        }
+                        node_execs += 1;
+                        busy = Some((exec, now, now + lat.max(1)));
+                    }
+                    Action::Sleep { until } => {
+                        if let Some(u) = until {
+                            assert!(
+                                u > now,
+                                "policy requested a wake-up in the past ({u} <= {now})"
+                            );
+                        }
+                        timer = until;
+                    }
+                }
+            }
+        }
+
+        RunResult {
+            latencies,
+            makespan,
+            busy: busy_total,
+            node_execs,
+            stats: policy.stats(),
+        }
+    }
+
+    /// Advance each member's cursor past one execution of `exec.tpos`.
+    fn advance_cursors(&self, reqs: &mut Reqs, exec: &Exec) -> Vec<Transition> {
+        let mut transitions = Vec::with_capacity(exec.reqs.len());
+        // all members share a model (validated at issue time)
+        let model = reqs.get(exec.reqs[0]).spec.model_idx;
+        let graph = &self.tables[model].graph;
+        for &id in &exec.reqs {
+            let st = reqs.get_mut(id);
+            if st.done || st.cursor.tpos != exec.tpos {
+                assert!(
+                    exec.padded,
+                    "unpadded execution carried request {id} not at node {}",
+                    exec.tpos
+                );
+                transitions.push(Transition::Masked);
+                continue;
+            }
+            match st.cursor.advance(graph, st.spec.in_len, st.spec.out_len) {
+                Some(c) => {
+                    let advanced = c.tpos != exec.tpos;
+                    st.cursor = c;
+                    transitions.push(if advanced {
+                        Transition::Advanced
+                    } else {
+                        Transition::Repeat
+                    });
+                }
+                None => {
+                    st.done = true;
+                    transitions.push(Transition::Finished);
+                }
+            }
+        }
+        transitions
+    }
+
+    /// Reject malformed executions loudly.
+    fn validate_exec(&self, reqs: &Reqs, exec: &Exec) {
+        assert!(!exec.reqs.is_empty(), "empty execution");
+        assert!(
+            exec.reqs.len() <= self.cfg.max_batch,
+            "batch {} exceeds model-allowed max {}",
+            exec.reqs.len(),
+            self.cfg.max_batch
+        );
+        let model = reqs.get(exec.reqs[0]).spec.model_idx;
+        assert!(
+            exec.tpos < self.tables[model].graph.nodes.len(),
+            "node index out of range"
+        );
+        for (i, &id) in exec.reqs.iter().enumerate() {
+            let st = reqs.get(id);
+            assert!(!st.released, "executing released request {id}");
+            assert_eq!(
+                st.spec.model_idx, model,
+                "cross-model batch (request {id})"
+            );
+            // duplicate check: O(n²) over ≤64 ids beats hashing here
+            assert!(
+                !exec.reqs[..i].contains(&id),
+                "duplicate request {id} in batch"
+            );
+            if !exec.padded {
+                assert!(!st.done, "unpadded exec of finished request {id}");
+                assert_eq!(
+                    st.cursor.tpos, exec.tpos,
+                    "request {id} cursor not at executed node"
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{GraphBatching, LazyBatching, Serial, SlackMode};
+    use crate::model::workloads::Workload;
+    use crate::npu::systolic::SystolicModel;
+    use crate::traffic::Trace;
+    use crate::{MS, SEC};
+
+    fn table(w: Workload) -> Arc<LatencyTable> {
+        Arc::new(LatencyTable::profile(
+            Arc::new(w.graph()),
+            &SystolicModel::default_npu(),
+            64,
+        ))
+    }
+
+    fn run_policy(w: Workload, rate: f64, dur: Nanos, mk: &str) -> RunResult {
+        let t = table(w);
+        let trace = Trace::generate(&t.graph, rate, dur, 42);
+        let engine = SimEngine::single(t.clone(), SimConfig::default());
+        let mut policy: Box<dyn Batcher> = match mk {
+            "serial" => Box::new(Serial::new()),
+            "lazy" => Box::new(LazyBatching::with_defaults(
+                t.clone(),
+                100 * MS,
+                SlackMode::Conservative,
+            )),
+            "oracle" => Box::new(LazyBatching::with_defaults(
+                t.clone(),
+                100 * MS,
+                SlackMode::Oracle,
+            )),
+            "graphb" => Box::new(GraphBatching::new(t.graph.clone(), 35 * MS, 64)),
+            _ => unreachable!(),
+        };
+        engine.run(&trace, policy.as_mut())
+    }
+
+    #[test]
+    fn all_policies_complete_every_request() {
+        for w in [Workload::ResNet, Workload::Gnmt] {
+            for mk in ["serial", "lazy", "oracle", "graphb"] {
+                let r = run_policy(w, 100.0, SEC, mk);
+                let trace = Trace::generate(&w.graph(), 100.0, SEC, 42);
+                assert_eq!(r.latencies.len(), trace.requests.len(), "{mk}/{}", w.name());
+                assert!(r.latencies.iter().all(|&(_, l)| l > 0));
+            }
+        }
+    }
+
+    #[test]
+    fn serial_latency_is_wait_plus_exec() {
+        // at a near-zero arrival rate every request runs in isolation:
+        // latency == its own true exec time (no queueing)
+        let t = table(Workload::ResNet);
+        let trace = Trace::generate(&t.graph, 5.0, SEC, 7);
+        let engine = SimEngine::single(t.clone(), SimConfig::default());
+        let mut s = Serial::new();
+        let r = engine.run(&trace, &mut s);
+        let expect = t.true_exec_time(1, 1);
+        for &(_, l) in &r.latencies {
+            assert!(
+                l >= expect && l < expect * 3,
+                "latency {l} vs exec {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn lazyb_beats_graphb_under_low_load() {
+        // the Fig-12 low-load result: graph batching needlessly stalls
+        let lazy = run_policy(Workload::ResNet, 16.0, 2 * SEC, "lazy");
+        let graphb = run_policy(Workload::ResNet, 16.0, 2 * SEC, "graphb");
+        let mean = |r: &RunResult| {
+            r.latencies.iter().map(|&(_, l)| l as f64).sum::<f64>() / r.latencies.len() as f64
+        };
+        assert!(
+            mean(&lazy) * 3.0 < mean(&graphb),
+            "lazy {:.2}ms vs graphb {:.2}ms",
+            mean(&lazy) / 1e6,
+            mean(&graphb) / 1e6
+        );
+    }
+
+    #[test]
+    fn lazyb_sustains_high_load_resnet() {
+        let r = run_policy(Workload::ResNet, 1000.0, SEC, "lazy");
+        assert!(
+            r.throughput() > 800.0,
+            "throughput {:.0} req/s",
+            r.throughput()
+        );
+    }
+
+    #[test]
+    fn busy_time_bounded_by_makespan() {
+        for mk in ["serial", "lazy", "graphb"] {
+            let r = run_policy(Workload::Transformer, 200.0, SEC, mk);
+            assert!(r.busy <= r.makespan, "{mk}");
+            assert!(r.utilization() <= 1.0);
+            assert!(r.node_execs > 0);
+        }
+    }
+
+    #[test]
+    fn oracle_never_worse_sla_than_lazy_on_violations() {
+        let lazy = run_policy(Workload::Transformer, 800.0, SEC, "lazy");
+        let orac = run_policy(Workload::Transformer, 800.0, SEC, "oracle");
+        let sla = 100 * MS;
+        assert!(orac.violation_rate(sla) <= lazy.violation_rate(sla) + 0.02);
+    }
+
+    #[test]
+    fn padded_execution_masks_mismatched_cursors() {
+        // GraphB executes mixed-length seq2seq batches padded: members
+        // whose cursor diverges from the batch cursor ride masked, and
+        // everyone is released only when the padded graph completes.
+        let t = table(Workload::Gnmt);
+        let mut trace = Trace::generate(&t.graph, 50.0, SEC / 10, 3);
+        // force two very different lengths arriving together
+        if trace.requests.len() >= 2 {
+            trace.requests[0].in_len = 3;
+            trace.requests[0].out_len = 2;
+            trace.requests[1].in_len = 30;
+            trace.requests[1].out_len = 28;
+            trace.requests[1].arrival = trace.requests[0].arrival;
+        }
+        let engine = SimEngine::single(t.clone(), SimConfig::default());
+        let mut gb = GraphBatching::new(t.graph.clone(), 35 * MS, 64);
+        let r = engine.run(&trace, &mut gb);
+        assert_eq!(r.latencies.len(), trace.requests.len());
+        // the short request cannot finish before the long one if batched:
+        let lat = |id: u64| r.latencies.iter().find(|&&(i, _)| i == id).unwrap().1;
+        if trace.requests.len() >= 2 {
+            let release_0 = trace.requests[0].arrival + lat(0);
+            let release_1 = trace.requests[1].arrival + lat(1);
+            assert_eq!(release_0, release_1, "padded batch releases together");
+        }
+    }
+
+    #[test]
+    fn engine_counts_busy_time_per_execution() {
+        let t = table(Workload::ResNet);
+        let trace = Trace::generate(&t.graph, 20.0, SEC / 5, 9);
+        let engine = SimEngine::single(t.clone(), SimConfig::default());
+        let mut s = Serial::new();
+        let r = engine.run(&trace, &mut s);
+        // busy time equals the sum of per-request exec time for serial
+        let expect: u64 = trace.requests.len() as u64 * t.true_exec_time(1, 1);
+        assert!(
+            (r.busy as i64 - expect as i64).unsigned_abs() < expect / 100,
+            "busy {} vs expected {expect}",
+            r.busy
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = run_policy(Workload::Gnmt, 300.0, SEC, "lazy");
+        let b = run_policy(Workload::Gnmt, 300.0, SEC, "lazy");
+        assert_eq!(a.latencies, b.latencies);
+        assert_eq!(a.node_execs, b.node_execs);
+    }
+}

@@ -1,0 +1,12 @@
+//! Discrete-event simulation at node granularity.
+//!
+//! The engine owns the (single) backend processor, the virtual clock and
+//! all request cursors; a [`crate::coordinator::Batcher`] policy decides
+//! what to run at each node boundary. Because the engine — not the policy
+//! — advances cursors, validates executions and records completions, every
+//! policy is measured under identical rules and a buggy policy fails loudly
+//! instead of quietly inflating its own numbers.
+
+pub mod engine;
+
+pub use engine::{RunResult, SimConfig, SimEngine};

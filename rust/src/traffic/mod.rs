@@ -1,0 +1,17 @@
+//! Inference request traffic generation.
+//!
+//! §V: "we establish an inference query traffic generator which issues
+//! inference requests … based on a Poisson distribution", with
+//! low/medium/heavy bands at 0-256 / 256-500 / 500+ queries/sec, and
+//! sequence lengths for the translation workloads drawn to match the
+//! WMT-2019 characterization (Fig. 11).
+
+pub mod bursty;
+pub mod poisson;
+pub mod seqlen;
+pub mod trace;
+
+pub use bursty::{generate_bursty, BurstConfig};
+pub use poisson::PoissonArrivals;
+pub use seqlen::{LangPair, SeqLenDist};
+pub use trace::{RequestSpec, Trace};

@@ -1,0 +1,90 @@
+//! Poisson arrival process (exponential inter-arrival gaps).
+
+use crate::util::Prng;
+use crate::{Nanos, SEC};
+
+/// Iterator over arrival timestamps of a homogeneous Poisson process.
+pub struct PoissonArrivals {
+    rng: Prng,
+    rate_per_sec: f64,
+    next_at: f64, // seconds
+}
+
+impl PoissonArrivals {
+    pub fn new(rate_per_sec: f64, seed: u64) -> PoissonArrivals {
+        assert!(rate_per_sec > 0.0, "arrival rate must be positive");
+        PoissonArrivals {
+            rng: Prng::new(seed),
+            rate_per_sec,
+            next_at: 0.0,
+        }
+    }
+
+    /// Traffic-band name per the paper's low/medium/heavy split.
+    pub fn band(rate_per_sec: f64) -> &'static str {
+        if rate_per_sec < 256.0 {
+            "low"
+        } else if rate_per_sec <= 500.0 {
+            "medium"
+        } else {
+            "heavy"
+        }
+    }
+}
+
+impl Iterator for PoissonArrivals {
+    type Item = Nanos;
+
+    fn next(&mut self) -> Option<Nanos> {
+        self.next_at += self.rng.next_exp(self.rate_per_sec);
+        Some((self.next_at * SEC as f64) as Nanos)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrivals_strictly_increase() {
+        let mut prev = 0;
+        for t in PoissonArrivals::new(1000.0, 1).take(10_000) {
+            assert!(t >= prev);
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn empirical_rate_matches() {
+        let n = 100_000usize;
+        let last = PoissonArrivals::new(250.0, 2).take(n).last().unwrap();
+        let secs = last as f64 / SEC as f64;
+        let rate = n as f64 / secs;
+        assert!((rate - 250.0).abs() < 5.0, "rate={rate}");
+    }
+
+    #[test]
+    fn inter_arrival_cv_close_to_one() {
+        // Poisson gaps have coefficient of variation 1.
+        let ts: Vec<Nanos> = PoissonArrivals::new(500.0, 3).take(50_000).collect();
+        let gaps: Vec<f64> = ts.windows(2).map(|w| (w[1] - w[0]) as f64).collect();
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        let var = gaps.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>() / gaps.len() as f64;
+        let cv = var.sqrt() / mean;
+        assert!((cv - 1.0).abs() < 0.05, "cv={cv}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a: Vec<Nanos> = PoissonArrivals::new(100.0, 7).take(100).collect();
+        let b: Vec<Nanos> = PoissonArrivals::new(100.0, 7).take(100).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn bands() {
+        assert_eq!(PoissonArrivals::band(16.0), "low");
+        assert_eq!(PoissonArrivals::band(300.0), "medium");
+        assert_eq!(PoissonArrivals::band(1000.0), "heavy");
+    }
+}

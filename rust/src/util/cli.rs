@@ -1,0 +1,154 @@
+//! Tiny CLI argument parser (clap is not vendored).
+//!
+//! Supports `--flag`, `--key value`, and `--key=value` forms plus
+//! positional arguments, with typed getters that report usable errors.
+
+use std::collections::HashMap;
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    opts: HashMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping `argv[0]`).
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// Parse from an iterator of tokens. A `--key` followed by a token that
+    /// does not start with `--` is treated as `--key value`; otherwise it
+    /// is a boolean flag.
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Args {
+        let toks: Vec<String> = tokens.into_iter().collect();
+        let mut args = Args::default();
+        let mut i = 0;
+        while i < toks.len() {
+            let t = &toks[i];
+            if let Some(stripped) = t.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else if i + 1 < toks.len() && !toks[i + 1].starts_with("--") {
+                    args.opts.insert(stripped.to_string(), toks[i + 1].clone());
+                    i += 1;
+                } else {
+                    args.flags.push(stripped.to_string());
+                }
+            } else {
+                args.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        args
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name}: expected a number, got '{s}'")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> anyhow::Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name}: expected an integer, got '{s}'")),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        Ok(self.get_u64(name, default as u64)? as usize)
+    }
+
+    /// Parse a comma-separated list of numbers, e.g. `--rates 16,250,1000`.
+    pub fn get_f64_list(&self, name: &str, default: &[f64]) -> anyhow::Result<Vec<f64>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(s) => s
+                .split(',')
+                .map(|x| {
+                    x.trim()
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("--{name}: bad number '{x}'"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_forms() {
+        let a = parse("run --rate 250 --policy=lazy --json extra");
+        assert_eq!(a.positional, vec!["run"]);
+        assert_eq!(a.get("rate"), Some("250"));
+        assert_eq!(a.get("policy"), Some("lazy"));
+        // `--json extra`: "extra" doesn't start with --, so it binds as value
+        assert_eq!(a.get("json"), Some("extra"));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("--verbose");
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn flag_before_another_option() {
+        let a = parse("--json --rate 5");
+        assert!(a.flag("json"));
+        assert_eq!(a.get("rate"), Some("5"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse("--rate 2.5 --n 7");
+        assert_eq!(a.get_f64("rate", 0.0).unwrap(), 2.5);
+        assert_eq!(a.get_u64("n", 0).unwrap(), 7);
+        assert_eq!(a.get_u64("missing", 42).unwrap(), 42);
+        assert!(a.get_f64("n", 0.0).is_ok());
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = parse("--rate abc");
+        assert!(a.get_f64("rate", 0.0).is_err());
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse("--rates 16,250,1000");
+        assert_eq!(
+            a.get_f64_list("rates", &[]).unwrap(),
+            vec![16.0, 250.0, 1000.0]
+        );
+        assert_eq!(a.get_f64_list("other", &[1.0]).unwrap(), vec![1.0]);
+    }
+}

@@ -1,0 +1,186 @@
+//! Minimal JSON *writer* (serde is not vendored in this offline image).
+//!
+//! Experiments emit machine-readable results (`--json` flags on the bench
+//! binaries and the daemon) through this builder. There is deliberately no
+//! parser here — the rust side never consumes JSON; the artifact manifest
+//! uses a simpler line format (`runtime::manifest`).
+
+use std::fmt::Write as _;
+
+/// A JSON value under construction.
+#[derive(Debug, Clone)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Int(i64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn obj() -> Json {
+        Json::Obj(Vec::new())
+    }
+
+    pub fn arr() -> Json {
+        Json::Arr(Vec::new())
+    }
+
+    /// Insert a field (object values only; panics otherwise — misuse is a
+    /// programming error, not an input error).
+    pub fn set(mut self, key: &str, val: impl Into<Json>) -> Json {
+        match &mut self {
+            Json::Obj(fields) => fields.push((key.to_string(), val.into())),
+            _ => panic!("Json::set on non-object"),
+        }
+        self
+    }
+
+    /// Append an element (array values only).
+    pub fn push(mut self, val: impl Into<Json>) -> Json {
+        match &mut self {
+            Json::Arr(items) => items.push(val.into()),
+            _ => panic!("Json::push on non-array"),
+        }
+        self
+    }
+
+    /// Serialize to a compact string.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Int(i) => {
+                let _ = write!(out, "{i}");
+            }
+            Json::Num(x) => {
+                if x.is_finite() {
+                    let _ = write!(out, "{x}");
+                } else {
+                    out.push_str("null"); // JSON has no NaN/Inf
+                }
+            }
+            Json::Str(s) => write_escaped(out, s),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(out, k);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn write_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+impl From<f64> for Json {
+    fn from(x: f64) -> Json {
+        Json::Num(x)
+    }
+}
+impl From<i64> for Json {
+    fn from(x: i64) -> Json {
+        Json::Int(x)
+    }
+}
+impl From<u64> for Json {
+    fn from(x: u64) -> Json {
+        Json::Int(x as i64)
+    }
+}
+impl From<usize> for Json {
+    fn from(x: usize) -> Json {
+        Json::Int(x as i64)
+    }
+}
+impl From<bool> for Json {
+    fn from(x: bool) -> Json {
+        Json::Bool(x)
+    }
+}
+impl From<&str> for Json {
+    fn from(x: &str) -> Json {
+        Json::Str(x.to_string())
+    }
+}
+impl From<String> for Json {
+    fn from(x: String) -> Json {
+        Json::Str(x)
+    }
+}
+impl From<Vec<f64>> for Json {
+    fn from(xs: Vec<f64>) -> Json {
+        Json::Arr(xs.into_iter().map(Json::Num).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_nested() {
+        let j = Json::obj()
+            .set("name", "resnet")
+            .set("batch", 16u64)
+            .set("ok", true)
+            .set("lat_ms", vec![1.5, 2.25])
+            .set("nested", Json::obj().set("x", Json::Null));
+        assert_eq!(
+            j.render(),
+            r#"{"name":"resnet","batch":16,"ok":true,"lat_ms":[1.5,2.25],"nested":{"x":null}}"#
+        );
+    }
+
+    #[test]
+    fn escapes_strings() {
+        let j = Json::obj().set("s", "a\"b\\c\nd");
+        assert_eq!(j.render(), r#"{"s":"a\"b\\c\nd"}"#);
+    }
+
+    #[test]
+    fn nan_becomes_null() {
+        let j = Json::Arr(vec![Json::Num(f64::NAN), Json::Num(1.0)]);
+        assert_eq!(j.render(), "[null,1]");
+    }
+}

@@ -1,0 +1,18 @@
+//! Small self-contained utilities.
+//!
+//! The build runs fully offline against a vendored registry that does not
+//! carry `rand`, `serde`, `clap` or `proptest`, so this module provides the
+//! minimal deterministic replacements the rest of the crate needs: a
+//! splitmix/xoshiro PRNG, summary statistics, a tiny JSON writer for
+//! machine-readable experiment output, an ASCII table renderer for the
+//! bench harnesses, and a lightweight randomized property-test helper.
+
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod proptest;
+pub mod stats;
+pub mod table;
+
+pub use prng::Prng;
+pub use stats::Summary;

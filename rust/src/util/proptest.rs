@@ -1,0 +1,134 @@
+//! Lightweight randomized property-testing helper.
+//!
+//! The vendored registry does not carry `proptest`, so coordinator
+//! invariants are checked with this seeded random-input harness instead:
+//! `check(cases, |g| ...)` runs the property against `cases` generated
+//! inputs and, on failure, reports the failing case's seed so it can be
+//! replayed deterministically with [`replay`]. (No shrinking — failing
+//! seeds are small enough to debug directly.)
+
+use super::prng::Prng;
+
+/// Per-case generator handle passed to the property closure.
+pub struct Gen {
+    rng: Prng,
+    pub case_seed: u64,
+}
+
+impl Gen {
+    pub fn u64(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo <= hi);
+        lo + self.rng.next_range(hi - lo + 1)
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.u64(lo as u64, hi as u64) as usize
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_f64() * (hi - lo)
+    }
+
+    pub fn bool(&mut self, p_true: f64) -> bool {
+        self.rng.next_f64() < p_true
+    }
+
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        assert!(!xs.is_empty());
+        &xs[self.usize(0, xs.len() - 1)]
+    }
+
+    pub fn vec<T>(&mut self, len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        (0..len).map(|_| f(self)).collect()
+    }
+
+    /// Raw access for custom distributions.
+    pub fn rng(&mut self) -> &mut Prng {
+        &mut self.rng
+    }
+}
+
+/// Run `prop` against `cases` random inputs derived from `root_seed`.
+/// Panics with the failing case seed on the first property violation
+/// (properties signal failure by panicking, e.g. via `assert!`).
+pub fn check_seeded(root_seed: u64, cases: usize, prop: impl Fn(&mut Gen)) {
+    for i in 0..cases {
+        let case_seed = root_seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(i as u64);
+        let mut g = Gen {
+            rng: Prng::new(case_seed),
+            case_seed,
+        };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property failed on case {i} (replay with seed {case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Run with the default root seed (stable across CI runs).
+pub fn check(cases: usize, prop: impl Fn(&mut Gen)) {
+    check_seeded(0xC0FFEE, cases, prop);
+}
+
+/// Re-run a single failing case by its reported seed.
+pub fn replay(case_seed: u64, prop: impl Fn(&mut Gen)) {
+    let mut g = Gen {
+        rng: Prng::new(case_seed),
+        case_seed,
+    };
+    prop(&mut g);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0usize;
+        // interior mutability through a cell to count invocations
+        let cell = std::cell::Cell::new(0usize);
+        check(50, |g| {
+            let a = g.u64(0, 100);
+            let b = g.u64(0, 100);
+            assert!(a + b >= a);
+            cell.set(cell.get() + 1);
+        });
+        count += cell.get();
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let result = std::panic::catch_unwind(|| {
+            check(100, |g| {
+                let x = g.u64(0, 10);
+                assert!(x < 10, "hit the max");
+            });
+        });
+        let err = result.expect_err("property should fail");
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("replay with seed"), "msg={msg}");
+    }
+
+    #[test]
+    fn gen_bounds_respected() {
+        check(200, |g| {
+            let x = g.u64(5, 9);
+            assert!((5..=9).contains(&x));
+            let f = g.f64(-1.0, 1.0);
+            assert!((-1.0..=1.0).contains(&f));
+            let v = g.vec(3, |g| g.usize(0, 2));
+            assert_eq!(v.len(), 3);
+        });
+    }
+}

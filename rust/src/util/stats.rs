@@ -1,0 +1,172 @@
+//! Summary statistics over latency samples: mean, percentiles, CDF.
+//!
+//! Percentiles use the nearest-rank method on a sorted copy; these vectors
+//! are small (≤ a few hundred thousand samples per run) so an O(n log n)
+//! sort at summary time is fine and keeps recording allocation-free.
+
+/// Aggregated view over a set of `f64` samples (typically latencies in ms).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub count: usize,
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p25: f64,
+    pub p50: f64,
+    pub p75: f64,
+    pub p90: f64,
+    pub p99: f64,
+}
+
+impl Summary {
+    /// Summarise `samples`. Returns a zeroed summary for empty input.
+    pub fn of(samples: &[f64]) -> Summary {
+        if samples.is_empty() {
+            return Summary {
+                count: 0,
+                mean: 0.0,
+                min: 0.0,
+                max: 0.0,
+                p25: 0.0,
+                p50: 0.0,
+                p75: 0.0,
+                p90: 0.0,
+                p99: 0.0,
+            };
+        }
+        let mut v: Vec<f64> = samples.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = v.iter().sum::<f64>() / v.len() as f64;
+        Summary {
+            count: v.len(),
+            mean,
+            min: v[0],
+            max: *v.last().unwrap(),
+            p25: percentile_sorted(&v, 25.0),
+            p50: percentile_sorted(&v, 50.0),
+            p75: percentile_sorted(&v, 75.0),
+            p90: percentile_sorted(&v, 90.0),
+            p99: percentile_sorted(&v, 99.0),
+        }
+    }
+}
+
+/// Nearest-rank percentile over an already-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=100.0).contains(&p));
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    // Linear interpolation between closest ranks (type-7 / numpy default).
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Arithmetic mean, 0.0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Geometric mean of strictly-positive values (used for paper-style
+/// "average X× improvement" aggregation across workloads).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = xs.iter().map(|x| x.max(1e-12).ln()).sum();
+    (s / xs.len() as f64).exp()
+}
+
+/// Empirical CDF evaluated at the given thresholds: fraction of samples
+/// `<= t` for each `t` in `thresholds`.
+pub fn cdf_at(samples: &[f64], thresholds: &[f64]) -> Vec<f64> {
+    let mut v: Vec<f64> = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    thresholds
+        .iter()
+        .map(|&t| {
+            let idx = v.partition_point(|&x| x <= t);
+            if v.is_empty() {
+                0.0
+            } else {
+                idx as f64 / v.len() as f64
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_summary_is_zero() {
+        let s = Summary::of(&[]);
+        assert_eq!(s.count, 0);
+        assert_eq!(s.mean, 0.0);
+    }
+
+    #[test]
+    fn single_sample() {
+        let s = Summary::of(&[4.2]);
+        assert_eq!(s.count, 1);
+        assert_eq!(s.mean, 4.2);
+        assert_eq!(s.p99, 4.2);
+        assert_eq!(s.min, 4.2);
+        assert_eq!(s.max, 4.2);
+    }
+
+    #[test]
+    fn known_percentiles() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = Summary::of(&xs);
+        assert!((s.p50 - 50.5).abs() < 1e-9);
+        assert!((s.p25 - 25.75).abs() < 1e-9);
+        assert!((s.p99 - 99.01).abs() < 1e-9);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+        assert!((s.mean - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_monotone_in_p() {
+        let xs = [3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0];
+        let mut v = xs.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut prev = f64::NEG_INFINITY;
+        for p in 0..=100 {
+            let q = percentile_sorted(&v, p as f64);
+            assert!(q >= prev);
+            prev = q;
+        }
+    }
+
+    #[test]
+    fn geomean_of_ratios() {
+        assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-9);
+        assert!((geomean(&[1.0, 1.0, 1.0]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cdf_values() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let c = cdf_at(&xs, &[0.5, 1.0, 2.5, 4.0, 10.0]);
+        assert_eq!(c, vec![0.0, 0.25, 0.5, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn unsorted_input_handled() {
+        let s = Summary::of(&[5.0, 1.0, 3.0]);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p50, 3.0);
+    }
+}

@@ -1,0 +1,119 @@
+//! ASCII table renderer for bench harness output.
+//!
+//! Every bench binary prints the same rows/series the paper's figure or
+//! table reports; this renderer keeps those printouts aligned and
+//! greppable (`row:` prefix on data lines for easy extraction).
+
+/// Column-aligned ASCII table.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Table {
+        Table {
+            header: header.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width must match header"
+        );
+        self.rows.push(cells);
+    }
+
+    /// Render with padded columns; data rows carry a `row:` prefix.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_line = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str("     ");
+        out.push_str(&fmt_line(&self.header, &widths));
+        out.push('\n');
+        out.push_str("     ");
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncol - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str("row: ");
+            out.push_str(&fmt_line(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format a float with 3 significant-ish decimals, trimming noise.
+pub fn f3(x: f64) -> String {
+    if x == 0.0 {
+        "0".to_string()
+    } else if x.abs() >= 100.0 {
+        format!("{x:.1}")
+    } else if x.abs() >= 1.0 {
+        format!("{x:.2}")
+    } else {
+        format!("{x:.4}")
+    }
+}
+
+/// Format a ratio like `12.3x`.
+pub fn ratio(x: f64) -> String {
+    format!("{}x", f3(x))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(vec!["policy", "lat_ms"]);
+        t.row(vec!["LazyB".to_string(), f3(1.234)]);
+        t.row(vec!["GraphB(95)".to_string(), f3(123.456)]);
+        let s = t.render();
+        assert!(s.contains("row: "));
+        assert!(s.contains("LazyB"));
+        assert!(s.contains("123.5"));
+        // all data lines have the grep prefix
+        for line in s.lines().skip(2) {
+            assert!(line.starts_with("row: "));
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_mismatch_panics() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.row(vec!["only-one"]);
+    }
+
+    #[test]
+    fn f3_ranges() {
+        assert_eq!(f3(0.0), "0");
+        assert_eq!(f3(0.1234), "0.1234");
+        assert_eq!(f3(1.234), "1.23");
+        assert_eq!(f3(123.456), "123.5");
+    }
+}

@@ -1,0 +1,207 @@
+//! Randomized property tests on coordinator invariants (in-tree
+//! `util::proptest` harness; `proptest` itself is not in the offline
+//! vendored registry — see DESIGN.md §Substitutions).
+
+use std::sync::Arc;
+
+use lazybatching::coordinator::batch_table::{BatchTable, Entry};
+use lazybatching::coordinator::{Batcher, GraphBatching, LazyBatching, Serial, SlackMode};
+use lazybatching::exp::{self, DeviceKind};
+use lazybatching::model::{LatencyTable, Workload};
+use lazybatching::sim::{SimConfig, SimEngine};
+use lazybatching::traffic::Trace;
+use lazybatching::util::proptest::check;
+use lazybatching::{MS, SEC};
+
+/// The BatchTable invariants hold under arbitrary interleavings of
+/// push / merge / retire with random splits.
+#[test]
+fn prop_batch_table_invariants_under_random_ops() {
+    check(300, |g| {
+        let mut bt = BatchTable::new();
+        let mut next_id = 0u64;
+        let max_batch = g.usize(1, 16);
+        let mut population = 0usize;
+        for _ in 0..g.usize(1, 60) {
+            let op = g.usize(0, 2);
+            match op {
+                // push a new group at node 0 (always legal: 0 <= any top)
+                0 => {
+                    let k = g.usize(1, 4);
+                    let ids: Vec<u64> = (0..k).map(|i| next_id + i as u64).collect();
+                    next_id += k as u64;
+                    population += k;
+                    bt.push(Entry { reqs: ids, tpos: 0 });
+                }
+                // merge
+                1 => {
+                    bt.merge_top(max_batch);
+                }
+                // retire the top with a random finished/advanced split
+                2 => {
+                    if let Some(top) = bt.top().cloned() {
+                        let mut finished = Vec::new();
+                        let mut advanced = Vec::new();
+                        for &r in &top.reqs {
+                            match g.usize(0, 2) {
+                                0 => finished.push(r),
+                                1 => advanced.push(r),
+                                _ => {} // repeat
+                            }
+                        }
+                        population -= finished.len();
+                        bt.retire_top(&finished, &advanced);
+                    }
+                }
+                _ => unreachable!(),
+            }
+            // invariants after EVERY operation
+            bt.check().expect("BatchTable invariant violated");
+            assert_eq!(bt.total_reqs(), population, "request conservation");
+        }
+    });
+}
+
+/// Every policy completes every request, releases each exactly once, and
+/// never exceeds the model-allowed max batch — across random workloads,
+/// rates, SLAs and seeds. (The engine asserts the per-execution rules;
+/// this property drives it through random configurations.)
+#[test]
+fn prop_policies_complete_all_requests() {
+    check(40, |g| {
+        let w = *g.choose(&[
+            Workload::ResNet,
+            Workload::Gnmt,
+            Workload::Transformer,
+            Workload::MobileNet,
+        ]);
+        let rate = g.f64(10.0, 1500.0);
+        let sla = g.u64(10, 200) * MS;
+        let max_batch = *g.choose(&[4usize, 16, 64]);
+        let seed = g.u64(0, u64::MAX - 1);
+        let table = Arc::new(LatencyTable::profile(
+            Arc::new(w.graph()),
+            &lazybatching::npu::systolic::SystolicModel::default_npu(),
+            max_batch,
+        ));
+        let trace = Trace::generate(&table.graph, rate, SEC / 4, seed);
+        if trace.requests.is_empty() {
+            return;
+        }
+        let engine = SimEngine::single(
+            table.clone(),
+            SimConfig {
+                max_batch,
+                ..SimConfig::default()
+            },
+        );
+        let which = g.usize(0, 3);
+        let mut policy: Box<dyn Batcher> = match which {
+            0 => Box::new(Serial::new()),
+            1 => Box::new(GraphBatching::new(
+                table.graph.clone(),
+                g.u64(1, 100) * MS,
+                max_batch,
+            )),
+            2 => Box::new(LazyBatching::new(
+                table.clone(),
+                sla,
+                32,
+                SlackMode::Conservative,
+                max_batch,
+            )),
+            _ => Box::new(LazyBatching::new(
+                table.clone(),
+                sla,
+                32,
+                SlackMode::Oracle,
+                max_batch,
+            )),
+        };
+        let r = engine.run(&trace, policy.as_mut());
+        assert_eq!(r.latencies.len(), trace.requests.len());
+        // each request released exactly once
+        let mut seen = std::collections::HashSet::new();
+        for &(id, lat) in &r.latencies {
+            assert!(seen.insert(id), "double release {id}");
+            assert!(lat > 0);
+        }
+        assert!(r.busy <= r.makespan);
+    });
+}
+
+/// LazyBatching latency dominance at low load: for any low-traffic
+/// configuration, LazyB's mean latency is never (much) worse than graph
+/// batching with any window.
+#[test]
+fn prop_lazy_never_loses_badly_at_low_load() {
+    check(15, |g| {
+        let w = *g.choose(&[Workload::ResNet, Workload::Transformer]);
+        let rate = g.f64(5.0, 100.0);
+        let seed = g.u64(0, u64::MAX - 1);
+        let wnd = g.u64(5, 95);
+        let cfg = exp::ExpConfig {
+            workload: w,
+            rate,
+            duration: SEC / 2,
+            runs: 1,
+            seed,
+            device: DeviceKind::Npu,
+            ..exp::ExpConfig::default()
+        };
+        let lazy = exp::run(&exp::ExpConfig {
+            policy: exp::PolicyCfg::Lazy,
+            ..cfg.clone()
+        });
+        let gb = exp::run(&exp::ExpConfig {
+            policy: exp::PolicyCfg::GraphB(wnd),
+            ..cfg.clone()
+        });
+        assert!(
+            lazy.mean_latency_ms() <= gb.mean_latency_ms() * 1.10,
+            "{} rate {rate:.0} wnd {wnd}: lazy {} vs gb {}",
+            w.name(),
+            lazy.mean_latency_ms(),
+            gb.mean_latency_ms()
+        );
+    });
+}
+
+/// The conservative slack estimator is sound: it never reports more slack
+/// than the oracle's exact forward simulation (conservatism must only
+/// ever shrink slack).
+#[test]
+fn prop_conservative_slack_is_conservative() {
+    use lazybatching::coordinator::{Reqs, SlackPredictor};
+    use lazybatching::traffic::RequestSpec;
+    check(100, |g| {
+        let w = *g.choose(&[Workload::Gnmt, Workload::Transformer, Workload::ResNet]);
+        let table = exp::make_table(w, DeviceKind::Npu, 64);
+        let sla = g.u64(20, 200) * MS;
+        let cons = SlackPredictor::new(table.clone(), sla, 32, SlackMode::Conservative);
+        let orac = SlackPredictor::new(table.clone(), sla, 32, SlackMode::Oracle);
+        let mut reqs = Reqs::default();
+        let n = g.usize(1, 12);
+        for i in 0..n {
+            let in_len = g.usize(1, 40);
+            let out_len = g.usize(1, 32); // within the dec bound
+            reqs.insert(RequestSpec {
+                id: i as u64,
+                arrival: 0,
+                in_len,
+                out_len,
+                model_idx: 0,
+            });
+        }
+        let bt = BatchTable::new();
+        let ids: Vec<u64> = (0..n as u64).collect();
+        let now = g.u64(0, 20) * MS;
+        let s_cons = cons.min_slack_if_admitted(now, &reqs, &bt, &ids);
+        let s_orac = orac.min_slack_if_admitted(now, &reqs, &bt, &ids);
+        assert!(
+            s_cons <= s_orac,
+            "{}: conservative {s_cons} > oracle {s_orac} (n={n})",
+            w.name()
+        );
+    });
+}

@@ -1,0 +1,167 @@
+//! Cross-module integration tests: traffic → policies → engine → metrics,
+//! exercising the paper's qualitative claims end to end on the simulator.
+
+use lazybatching::exp::{self, DeviceKind, ExpConfig, PolicyCfg};
+use lazybatching::model::Workload;
+use lazybatching::{MS, SEC};
+
+fn cfg(w: Workload, p: PolicyCfg, rate: f64) -> ExpConfig {
+    ExpConfig {
+        workload: w,
+        policy: p,
+        rate,
+        duration: SEC,
+        runs: 3,
+        sla: 100 * MS,
+        ..ExpConfig::default()
+    }
+}
+
+#[test]
+fn lazyb_beats_every_graphb_window_on_latency_low_load() {
+    for w in Workload::MAIN {
+        let lazy = exp::run(&cfg(w, PolicyCfg::Lazy, 16.0));
+        for wnd in exp::GRAPHB_WINDOWS_MS {
+            let gb = exp::run(&cfg(w, PolicyCfg::GraphB(wnd), 16.0));
+            assert!(
+                lazy.mean_latency_ms() < gb.mean_latency_ms(),
+                "{} GraphB({wnd}): {} !< {}",
+                w.name(),
+                lazy.mean_latency_ms(),
+                gb.mean_latency_ms()
+            );
+        }
+    }
+}
+
+#[test]
+fn lazyb_matches_best_graphb_throughput_high_load() {
+    for w in Workload::MAIN {
+        let lazy = exp::run(&cfg(w, PolicyCfg::Lazy, 1000.0));
+        let best_gb = exp::GRAPHB_WINDOWS_MS
+            .iter()
+            .map(|&wnd| exp::run(&cfg(w, PolicyCfg::GraphB(wnd), 1000.0)).mean_throughput())
+            .fold(0.0f64, f64::max);
+        assert!(
+            lazy.mean_throughput() >= best_gb * 0.90,
+            "{}: lazy tput {} vs best gb {}",
+            w.name(),
+            lazy.mean_throughput(),
+            best_gb
+        );
+    }
+}
+
+#[test]
+fn serial_collapses_beyond_capacity_lazyb_does_not() {
+    // ResNet single-batch capacity ≈ 750 req/s; at 1000 Serial must queue
+    // unboundedly while LazyB sustains via batching.
+    let serial = exp::run(&cfg(Workload::ResNet, PolicyCfg::Serial, 1000.0));
+    let lazy = exp::run(&cfg(Workload::ResNet, PolicyCfg::Lazy, 1000.0));
+    assert!(serial.mean_latency_ms() > 5.0 * lazy.mean_latency_ms());
+    assert!(lazy.mean_throughput() > 900.0);
+}
+
+#[test]
+fn lazyb_tail_latency_beats_best_graphb() {
+    // Fig 14's p99 claim at 1K req/s.
+    for w in Workload::MAIN {
+        let lazy = exp::run(&cfg(w, PolicyCfg::Lazy, 1000.0));
+        let best_gb_p99 = exp::GRAPHB_WINDOWS_MS
+            .iter()
+            .map(|&wnd| exp::run(&cfg(w, PolicyCfg::GraphB(wnd), 1000.0)).p99_ms())
+            .fold(f64::INFINITY, f64::min);
+        assert!(
+            lazy.p99_ms() < best_gb_p99,
+            "{}: lazy p99 {} !< gb p99 {}",
+            w.name(),
+            lazy.p99_ms(),
+            best_gb_p99
+        );
+    }
+}
+
+#[test]
+fn lazyb_zero_violations_at_loose_deadlines() {
+    // Fig 15: zero violations for deadlines above 20/40/60 ms.
+    for (w, deadline_ms) in [
+        (Workload::ResNet, 30u64),
+        (Workload::Gnmt, 60),
+        (Workload::Transformer, 60),
+    ] {
+        let mut c = cfg(w, PolicyCfg::Lazy, 1000.0);
+        c.sla = deadline_ms * MS;
+        let agg = exp::run(&c);
+        assert!(
+            agg.violation_rate(c.sla) < 0.01,
+            "{} @ {deadline_ms}ms: violation rate {}",
+            w.name(),
+            agg.violation_rate(c.sla)
+        );
+    }
+}
+
+#[test]
+fn oracle_at_least_as_good_as_lazyb_on_violations() {
+    for w in [Workload::Gnmt, Workload::Transformer] {
+        let mut base = cfg(w, PolicyCfg::Lazy, 1000.0);
+        base.sla = 40 * MS;
+        let lazy = exp::run(&base);
+        base.policy = PolicyCfg::Oracle;
+        let orac = exp::run(&base);
+        assert!(
+            orac.violation_rate(base.sla) <= lazy.violation_rate(base.sla) + 0.02,
+            "{}",
+            w.name()
+        );
+    }
+}
+
+#[test]
+fn gpu_profile_shows_larger_batching_wins() {
+    // Fig 17 direction: on the GPU profile, graph batching's window hurts
+    // even more at low load, so LazyB's advantage is at least as large.
+    let npu_lazy = exp::run(&cfg(Workload::Transformer, PolicyCfg::Lazy, 64.0));
+    let npu_gb = exp::run(&cfg(Workload::Transformer, PolicyCfg::GraphB(35), 64.0));
+    let mut gpu_cfg = cfg(Workload::Transformer, PolicyCfg::Lazy, 64.0);
+    gpu_cfg.device = DeviceKind::Gpu;
+    let gpu_lazy = exp::run(&gpu_cfg);
+    gpu_cfg.policy = PolicyCfg::GraphB(35);
+    let gpu_gb = exp::run(&gpu_cfg);
+    let npu_ratio = npu_gb.mean_latency_ms() / npu_lazy.mean_latency_ms();
+    let gpu_ratio = gpu_gb.mean_latency_ms() / gpu_lazy.mean_latency_ms();
+    assert!(gpu_ratio > 1.0, "LazyB must win on GPU too: {gpu_ratio}");
+    assert!(npu_ratio > 1.0);
+}
+
+#[test]
+fn dec_timesteps_too_small_causes_violations() {
+    // §VI-C: optimistic dec bound inflates slack → violations appear.
+    let mut tight = cfg(Workload::Transformer, PolicyCfg::Lazy, 1000.0);
+    tight.sla = 60 * MS;
+    tight.dec_timesteps = 32;
+    let good = exp::run(&tight);
+    tight.dec_timesteps = 4; // far below the ~90% coverage point
+    let bad = exp::run(&tight);
+    assert!(
+        bad.violation_rate(tight.sla) >= good.violation_rate(tight.sla),
+        "optimistic bound must not reduce violations: {} vs {}",
+        bad.violation_rate(tight.sla),
+        good.violation_rate(tight.sla)
+    );
+    assert!(good.violation_rate(tight.sla) < 0.01);
+}
+
+#[test]
+fn identical_traces_across_policies() {
+    // the comparison methodology itself: same seed ⇒ same arrivals for
+    // every policy (paired comparison, not just same distribution)
+    use lazybatching::traffic::Trace;
+    let g = Workload::Gnmt.graph();
+    let a = Trace::generate(&g, 300.0, SEC, 99);
+    let b = Trace::generate(&g, 300.0, SEC, 99);
+    assert_eq!(a.requests.len(), b.requests.len());
+    for (x, y) in a.requests.iter().zip(&b.requests) {
+        assert_eq!((x.arrival, x.in_len, x.out_len), (y.arrival, y.in_len, y.out_len));
+    }
+}

@@ -1,0 +1,26 @@
+#!/usr/bin/env bash
+# Tier-1 gate for the rust workspace. Run from the repo root:
+#
+#   ./ci.sh            # build + test + fmt + clippy
+#   ./ci.sh --fast     # build + test only
+#
+# The real PJRT path (cargo feature `real`) needs the xla crate and model
+# artifacts, so CI builds the default feature set; gate that path behind
+# `cargo test --features real` locally once `make artifacts` has run.
+set -euo pipefail
+cd "$(dirname "$0")/rust"
+
+run() {
+    echo "== $*"
+    "$@"
+}
+
+run cargo build --release
+run cargo test -q
+
+if [[ "${1:-}" != "--fast" ]]; then
+    run cargo fmt --check
+    run cargo clippy -- -D warnings
+fi
+
+echo "ci: OK"

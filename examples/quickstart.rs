@@ -5,10 +5,13 @@
 //! ```
 //!
 //! Runs the cycle-level NPU simulation (no artifacts needed) and prints
-//! the paper's four design points side by side.
+//! the paper's four design points side by side. Pass `--trace out.json`
+//! to additionally record one LazyBatching run through the telemetry
+//! subsystem and export a Perfetto-loadable Chrome trace.
 
 use lazybatching::exp::{self, ExpConfig, PolicyCfg};
 use lazybatching::model::Workload;
+use lazybatching::telemetry::{perfetto, RecordingTracer, TracerRef};
 use lazybatching::util::cli::Args;
 use lazybatching::util::table::{f3, Table};
 use lazybatching::{MS, SEC};
@@ -75,5 +78,26 @@ fn main() -> anyhow::Result<()> {
         "\nLazyB vs best GraphB latency: {}",
         lazybatching::util::table::ratio(best_gb_lat / lazy_lat.max(1e-9))
     );
+
+    if let Some(path) = args.get("trace") {
+        let cfg = ExpConfig {
+            policy: PolicyCfg::Lazy,
+            ..base
+        };
+        let table = exp::make_table(cfg.workload, cfg.device, cfg.max_batch);
+        let rec = RecordingTracer::new();
+        let tracer: TracerRef = rec.clone();
+        let result = exp::run_once_traced(&cfg, table, cfg.seed, &tracer);
+        let events = rec.take();
+        std::fs::write(path, perfetto::chrome_trace(&events).render())?;
+        println!(
+            "\nwrote {} lifecycle events ({} requests, {} node execs) to {path}\n\
+             open it in ui.perfetto.dev: one track per request, batch-size\n\
+             annotations on every node slice, merge/preempt markers",
+            events.len(),
+            result.latencies.len(),
+            result.node_execs
+        );
+    }
     Ok(())
 }

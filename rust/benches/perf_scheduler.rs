@@ -9,6 +9,7 @@ use lazybatching::coordinator::batch_table::{BatchTable, Entry};
 use lazybatching::coordinator::{Reqs, SlackMode, SlackPredictor};
 use lazybatching::exp::{self, ExpConfig, PolicyCfg};
 use lazybatching::model::Workload;
+use lazybatching::telemetry::{RecordingTracer, TracerRef};
 use lazybatching::traffic::RequestSpec;
 use lazybatching::util::table::{f3, Table};
 use lazybatching::MS;
@@ -78,7 +79,10 @@ fn main() {
         ]);
     }
 
-    // end-to-end simulator throughput (node events per second)
+    // end-to-end simulator throughput (node events per second), plus the
+    // telemetry tax: the same run through the default no-op tracer must be
+    // within noise (the ISSUE budget is <2% regression), and a recording
+    // tracer shows what full lifecycle capture costs.
     {
         let cfg = ExpConfig {
             workload: Workload::Transformer,
@@ -89,8 +93,11 @@ fn main() {
             ..ExpConfig::default()
         };
         let table = exp::make_table(cfg.workload, cfg.device, cfg.max_batch);
+        // warm up caches/allocator so the pairwise comparison is fair
+        std::hint::black_box(exp::run_once(&cfg, table.clone(), 1));
+
         let start = Instant::now();
-        let r = exp::run_once(&cfg, table, 1);
+        let r = exp::run_once(&cfg, table.clone(), 1);
         let wall = start.elapsed().as_secs_f64();
         t.row(vec![
             "sim node-events/s (transformer @1K)".to_string(),
@@ -101,6 +108,28 @@ fn main() {
             "sim wall-clock per simulated second".to_string(),
             f3(wall * 1e3),
             "ms".to_string(),
+        ]);
+
+        // second noop run = run-to-run noise floor for the comparison
+        let start = Instant::now();
+        std::hint::black_box(exp::run_once(&cfg, table.clone(), 1));
+        let wall_noop2 = start.elapsed().as_secs_f64();
+        t.row(vec![
+            "noop-tracer run-to-run delta".to_string(),
+            f3((wall_noop2 / wall - 1.0) * 100.0),
+            "% (noise floor)".to_string(),
+        ]);
+
+        let rec = RecordingTracer::new();
+        let tracer: TracerRef = rec.clone();
+        let start = Instant::now();
+        let rt = exp::run_once_traced(&cfg, table, 1, &tracer);
+        let wall_rec = start.elapsed().as_secs_f64();
+        assert_eq!(rt.node_execs, r.node_execs, "tracing changed the schedule");
+        t.row(vec![
+            format!("recording tracer ({} events)", rec.len()),
+            f3((wall_rec / wall - 1.0) * 100.0),
+            "% slowdown".to_string(),
         ]);
     }
     t.print();

@@ -24,6 +24,7 @@ use super::policy::{
 use super::slack::{SlackMode, SlackPredictor};
 use crate::model::graph::Cursor;
 use crate::model::LatencyTable;
+use crate::telemetry::{self, DenyReason, Event, TracerRef};
 use crate::Nanos;
 
 /// LazyBatching across co-located models.
@@ -34,6 +35,7 @@ pub struct ColocLazy {
     max_batch: usize,
     sla_target: Nanos,
     stats: PolicyStats,
+    tracer: TracerRef,
 }
 
 impl ColocLazy {
@@ -57,6 +59,7 @@ impl ColocLazy {
             max_batch,
             sla_target,
             stats: PolicyStats::default(),
+            tracer: telemetry::noop(),
         }
     }
 
@@ -127,6 +130,10 @@ impl ColocLazy {
 }
 
 impl Batcher for ColocLazy {
+    fn attach_tracer(&mut self, tracer: TracerRef) {
+        self.tracer = tracer;
+    }
+
     fn on_arrival(&mut self, _now: Nanos, reqs: &Reqs, id: ReqId) {
         let m = reqs.get(id).spec.model_idx;
         self.pending[m].push_back(id);
@@ -186,15 +193,49 @@ impl Batcher for ColocLazy {
                 k
             };
             if k > 0 {
-                if !self.bts[m].is_empty() {
+                let preempting = !self.bts[m].is_empty();
+                if preempting {
                     self.stats.preemptions += 1;
                 }
                 let ids: Vec<ReqId> = self.pending[m].drain(..k).collect();
                 self.stats.admitted += ids.len() as u64;
+                if self.tracer.enabled() {
+                    if preempting {
+                        let preempted = self.bts[m]
+                            .top()
+                            .map(|e| e.reqs.clone())
+                            .unwrap_or_default();
+                        self.tracer.record(Event::Preempt {
+                            t: now,
+                            preempted,
+                            admitted: ids.clone(),
+                        });
+                    }
+                    self.tracer.record(Event::Admitted {
+                        t: now,
+                        reqs: ids.clone(),
+                        preempting,
+                    });
+                }
                 self.bts[m].push(Entry { reqs: ids, tpos: 0 });
-                self.stats.merges += self.bts[m].merge_top(self.max_batch);
+                let merged = self.bts[m].merge_top(self.max_batch);
+                self.stats.merges += merged;
+                if merged > 0 && self.tracer.enabled() {
+                    self.tracer.record(Event::Merge {
+                        t: now,
+                        merged,
+                        depth_after: self.bts[m].depth(),
+                    });
+                }
             } else {
                 self.stats.denied += 1;
+                if self.tracer.enabled() {
+                    self.tracer.record(Event::Denied {
+                        t: now,
+                        pending: self.pending[m].len(),
+                        reason: DenyReason::SlackExhausted,
+                    });
+                }
             }
         }
         // run the most urgent model's active batch
@@ -243,6 +284,7 @@ pub struct ColocGraphB {
     max_batch: usize,
     active: Option<ColocActive>,
     stats: PolicyStats,
+    tracer: TracerRef,
 }
 
 impl ColocGraphB {
@@ -263,6 +305,7 @@ impl ColocGraphB {
             max_batch,
             active: None,
             stats: PolicyStats::default(),
+            tracer: telemetry::noop(),
         }
     }
 
@@ -282,6 +325,10 @@ impl ColocGraphB {
 }
 
 impl Batcher for ColocGraphB {
+    fn attach_tracer(&mut self, tracer: TracerRef) {
+        self.tracer = tracer;
+    }
+
     fn on_arrival(&mut self, _now: Nanos, reqs: &Reqs, id: ReqId) {
         let m = reqs.get(id).spec.model_idx;
         self.per_model[m].queue.push_back(id);
@@ -322,6 +369,15 @@ impl Batcher for ColocGraphB {
                 let max_in = members.iter().map(|&id| reqs.get(id).spec.in_len).max().unwrap();
                 let max_out = members.iter().map(|&id| reqs.get(id).spec.out_len).max().unwrap();
                 self.stats.admitted += members.len() as u64;
+                self.stats.max_batch_formed =
+                    self.stats.max_batch_formed.max(members.len() as u64);
+                if self.tracer.enabled() {
+                    self.tracer.record(Event::Admitted {
+                        t: now,
+                        reqs: members.clone(),
+                        preempting: false,
+                    });
+                }
                 self.active = Some(ColocActive {
                     model: m,
                     members,
@@ -339,6 +395,13 @@ impl Batcher for ColocGraphB {
                             .map(|&id| reqs.get(id).spec.arrival + self.btw)
                     })
                     .min();
+                if self.tracer.enabled() {
+                    let queued: usize =
+                        self.per_model.iter().map(|q| q.queue.len()).sum();
+                    if queued > 0 {
+                        self.tracer.record(Event::Stall { t: now, until, queued });
+                    }
+                }
                 return Action::Sleep { until };
             }
         }

@@ -22,6 +22,7 @@ use super::policy::{
 };
 use crate::model::graph::Cursor;
 use crate::model::ModelGraph;
+use crate::telemetry::{self, Event, TracerRef};
 use crate::Nanos;
 use std::sync::Arc;
 
@@ -43,6 +44,7 @@ pub struct GraphBatching {
     queue: VecDeque<ReqId>,
     active: Option<ActiveBatch>,
     stats: PolicyStats,
+    tracer: TracerRef,
 }
 
 impl GraphBatching {
@@ -55,10 +57,11 @@ impl GraphBatching {
             queue: VecDeque::new(),
             active: None,
             stats: PolicyStats::default(),
+            tracer: telemetry::noop(),
         }
     }
 
-    fn form_batch(&mut self, reqs: &Reqs) {
+    fn form_batch(&mut self, now: Nanos, reqs: &Reqs) {
         let n = self.max_batch.min(self.queue.len());
         let members: Vec<ReqId> = self.queue.drain(..n).collect();
         let max_in = members
@@ -73,6 +76,13 @@ impl GraphBatching {
             .unwrap_or(1);
         self.stats.admitted += members.len() as u64;
         self.stats.max_batch_formed = self.stats.max_batch_formed.max(members.len() as u64);
+        if self.tracer.enabled() {
+            self.tracer.record(Event::Admitted {
+                t: now,
+                reqs: members.clone(),
+                preempting: false,
+            });
+        }
         self.active = Some(ActiveBatch {
             members,
             cursor: Cursor::START,
@@ -83,6 +93,10 @@ impl GraphBatching {
 }
 
 impl Batcher for GraphBatching {
+    fn attach_tracer(&mut self, tracer: TracerRef) {
+        self.tracer = tracer;
+    }
+
     fn on_arrival(&mut self, _now: Nanos, _reqs: &Reqs, id: ReqId) {
         self.queue.push_back(id);
     }
@@ -113,8 +127,24 @@ impl Batcher for GraphBatching {
             let oldest_arrival = reqs.get(*self.queue.front().unwrap()).spec.arrival;
             let window_deadline = oldest_arrival + self.btw;
             if self.queue.len() >= self.max_batch || now >= window_deadline {
-                self.form_batch(reqs);
+                // why this batch formed (ablation benches read these)
+                self.stats.bump(
+                    if self.queue.len() >= self.max_batch {
+                        "batch_full"
+                    } else {
+                        "window_expired"
+                    },
+                    1,
+                );
+                self.form_batch(now, reqs);
             } else {
+                if self.tracer.enabled() {
+                    self.tracer.record(Event::Stall {
+                        t: now,
+                        until: Some(window_deadline),
+                        queued: self.queue.len(),
+                    });
+                }
                 return Action::Sleep {
                     until: Some(window_deadline),
                 };
@@ -252,5 +282,40 @@ mod tests {
     fn name_embeds_window() {
         let (g, _) = gb(65, 64);
         assert_eq!(g.name(), "GraphB(65)");
+    }
+
+    #[test]
+    fn batch_trigger_reasons_are_counted_and_traced() {
+        use crate::telemetry::RecordingTracer;
+        // window path
+        let (mut g, mut reqs) = gb(35, 64);
+        let rec = RecordingTracer::new();
+        g.attach_tracer(rec.clone());
+        reqs.insert(spec(0, 0, 5, 5));
+        g.on_arrival(0, &reqs, 0);
+        assert!(matches!(g.next_action(MS, &reqs), Action::Sleep { .. }));
+        assert!(matches!(g.next_action(35 * MS, &reqs), Action::Execute(_)));
+        assert_eq!(g.stats().extra_counter("window_expired"), 1);
+        assert_eq!(g.stats().extra_counter("batch_full"), 0);
+        let events = rec.take();
+        assert!(events.iter().any(|e| matches!(
+            e,
+            Event::Stall {
+                until: Some(u),
+                queued: 1,
+                ..
+            } if *u == 35 * MS
+        )));
+        assert!(events.iter().any(|e| e.kind() == "admitted"));
+
+        // full-batch path
+        let (mut g2, mut reqs2) = gb(95, 2);
+        for i in 0..2 {
+            reqs2.insert(spec(i, 0, 5, 5));
+            g2.on_arrival(0, &reqs2, i);
+        }
+        assert!(matches!(g2.next_action(0, &reqs2), Action::Execute(_)));
+        assert_eq!(g2.stats().extra_counter("batch_full"), 1);
+        assert_eq!(g2.stats().extra_counter("window_expired"), 0);
     }
 }

@@ -25,6 +25,7 @@ use super::policy::{
 };
 use super::slack::{SlackMode, SlackPredictor};
 use crate::model::LatencyTable;
+use crate::telemetry::{self, DenyReason, Event, TracerRef};
 use crate::Nanos;
 
 /// How pending inputs are admitted against the in-flight stack.
@@ -52,6 +53,7 @@ pub struct LazyBatching {
     max_batch: usize,
     admission: AdmissionRule,
     stats: PolicyStats,
+    tracer: TracerRef,
 }
 
 impl LazyBatching {
@@ -69,6 +71,7 @@ impl LazyBatching {
             max_batch,
             admission: AdmissionRule::Eq2,
             stats: PolicyStats::default(),
+            tracer: telemetry::noop(),
         }
     }
 
@@ -183,6 +186,10 @@ impl LazyBatching {
 }
 
 impl Batcher for LazyBatching {
+    fn attach_tracer(&mut self, tracer: TracerRef) {
+        self.tracer = tracer;
+    }
+
     fn on_arrival(&mut self, _now: Nanos, _reqs: &Reqs, id: ReqId) {
         self.pending.push_back(id);
     }
@@ -207,10 +214,19 @@ impl Batcher for LazyBatching {
 
     fn next_action(&mut self, now: Nanos, reqs: &Reqs) -> Action {
         // 1. merge sub-batches that reached a common node
-        self.stats.merges += self.bt.merge_top(self.max_batch);
+        let merged = self.bt.merge_top(self.max_batch);
+        self.stats.merges += merged;
+        if merged > 0 && self.tracer.enabled() {
+            self.tracer.record(Event::Merge {
+                t: now,
+                merged,
+                depth_after: self.bt.depth(),
+            });
+        }
 
         // 2. admission of pending inputs (lazy batching decision)
         if !self.pending.is_empty() {
+            let mut deny_reason = DenyReason::SlackExhausted;
             let k = if self.bt.is_empty() {
                 // Nothing in flight: issuing is plain execution, not lazy
                 // batching — the whole backlog drains as one batch (up to
@@ -228,27 +244,81 @@ impl Batcher for LazyBatching {
                 // worth it at all (it rarely is when the group is tiny and
                 // the in-flight batch is large).
                 let k = self.admissible_count(now, reqs);
+                if self.tracer.enabled() {
+                    // what the slack model saw for this boundary's
+                    // candidate (1-prefix when everything was denied, so
+                    // every Denied has an estimate to join against)
+                    let cand = self.pending_prefix(k.max(1));
+                    let predicted_slack = self
+                        .predictor
+                        .min_slack_if_admitted(now, reqs, &self.bt, &cand);
+                    self.tracer.record(Event::SlackEstimate {
+                        t: now,
+                        reqs: cand,
+                        predicted_slack,
+                    });
+                }
                 if k > 0 && self.preemption_pays_off(reqs, &self.pending_prefix(k)) {
                     k
                 } else {
+                    deny_reason = if k == 0 {
+                        DenyReason::SlackExhausted
+                    } else {
+                        DenyReason::PreemptionNotWorthIt
+                    };
                     0
                 }
             };
             if k > 0 {
-                if !self.bt.is_empty() {
+                let preempting = !self.bt.is_empty();
+                if preempting {
                     self.stats.preemptions += 1;
                 }
                 let ids: Vec<ReqId> = self.pending.drain(..k).collect();
                 self.stats.admitted += ids.len() as u64;
+                if self.tracer.enabled() {
+                    if preempting {
+                        let preempted = self
+                            .bt
+                            .top()
+                            .map(|e| e.reqs.clone())
+                            .unwrap_or_default();
+                        self.tracer.record(Event::Preempt {
+                            t: now,
+                            preempted,
+                            admitted: ids.clone(),
+                        });
+                    }
+                    self.tracer.record(Event::Admitted {
+                        t: now,
+                        reqs: ids.clone(),
+                        preempting,
+                    });
+                }
                 self.bt.push(Entry {
                     reqs: ids,
                     tpos: 0,
                 });
                 // a brand-new entry may merge with a top that is also at
                 // its node (e.g. both at node 0)
-                self.stats.merges += self.bt.merge_top(self.max_batch);
+                let merged = self.bt.merge_top(self.max_batch);
+                self.stats.merges += merged;
+                if merged > 0 && self.tracer.enabled() {
+                    self.tracer.record(Event::Merge {
+                        t: now,
+                        merged,
+                        depth_after: self.bt.depth(),
+                    });
+                }
             } else {
                 self.stats.denied += 1;
+                if self.tracer.enabled() {
+                    self.tracer.record(Event::Denied {
+                        t: now,
+                        pending: self.pending.len(),
+                        reason: deny_reason,
+                    });
+                }
             }
         }
 
@@ -415,5 +485,59 @@ mod tests {
         }
         assert_eq!(lb.stats().preemptions, 1);
         assert_eq!(lb.batch_table().depth(), 2);
+    }
+
+    #[test]
+    fn tracer_sees_denial_and_slack_estimate() {
+        use crate::telemetry::RecordingTracer;
+        let mut lb = LazyBatching::with_defaults(
+            table(Workload::Gnmt),
+            12 * MS,
+            SlackMode::Conservative,
+        );
+        let rec = RecordingTracer::new();
+        lb.attach_tracer(rec.clone());
+        let mut reqs = Reqs::default();
+        reqs.insert(RequestSpec {
+            id: 0,
+            arrival: 0,
+            in_len: 20,
+            out_len: 20,
+            model_idx: 0,
+        });
+        lb.on_arrival(0, &reqs, 0);
+        assert!(matches!(lb.next_action(0, &reqs), Action::Execute(_)));
+        reqs.insert(RequestSpec {
+            id: 1,
+            arrival: MS,
+            in_len: 20,
+            out_len: 20,
+            model_idx: 0,
+        });
+        lb.on_arrival(MS, &reqs, 1);
+        lb.next_action(MS, &reqs);
+        let events = rec.take();
+        assert!(
+            events.iter().any(|e| matches!(
+                e,
+                Event::Denied {
+                    reason: DenyReason::SlackExhausted,
+                    ..
+                }
+            )),
+            "no SlackExhausted denial in {events:?}"
+        );
+        // every denial is joined by the estimate that produced it
+        assert!(events
+            .iter()
+            .any(|e| matches!(e, Event::SlackEstimate { predicted_slack, .. } if *predicted_slack < 0)));
+        // the first admission (idle server) is also on record
+        assert!(events.iter().any(|e| matches!(
+            e,
+            Event::Admitted {
+                preempting: false,
+                ..
+            }
+        )));
     }
 }

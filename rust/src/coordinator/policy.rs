@@ -14,6 +14,7 @@
 //!   releases immediately.
 
 use crate::model::graph::Cursor;
+use crate::telemetry::{Registry, TracerRef};
 use crate::traffic::RequestSpec;
 use crate::Nanos;
 
@@ -132,6 +133,11 @@ pub struct Completion {
 
 /// Scheduler statistics (exposed for §VI-D style overhead accounting and
 /// the ablation benches).
+///
+/// The core counters keep their struct fields for cheap hot-path access
+/// and backwards compatibility; anything policy-specific goes through
+/// [`PolicyStats::bump`] named counters instead of growing this struct,
+/// and everything folds into a [`Registry`] for reporting.
 #[derive(Debug, Clone, Default)]
 pub struct PolicyStats {
     pub preemptions: u64,
@@ -141,10 +147,59 @@ pub struct PolicyStats {
     pub denied: u64,
     /// Largest batch ever issued in one node execution.
     pub max_batch_formed: u64,
+    /// Policy-registered named counters (insertion-ordered). Use
+    /// [`PolicyStats::bump`] to increment.
+    pub extra: Vec<(&'static str, u64)>,
+}
+
+impl PolicyStats {
+    /// Add `delta` to a policy-specific named counter, registering it on
+    /// first use.
+    pub fn bump(&mut self, name: &'static str, delta: u64) {
+        match self.extra.iter_mut().find(|(n, _)| *n == name) {
+            Some((_, v)) => *v += delta,
+            None => self.extra.push((name, delta)),
+        }
+    }
+
+    /// Value of a named extra counter (0 if never bumped).
+    pub fn extra_counter(&self, name: &str) -> u64 {
+        self.extra
+            .iter()
+            .find(|(n, _)| *n == name)
+            .map(|&(_, v)| v)
+            .unwrap_or(0)
+    }
+
+    /// Fold every counter — core fields and named extras — into `reg`.
+    pub fn fold_into(&self, reg: &mut Registry) {
+        reg.add("preemptions", self.preemptions);
+        reg.add("merges", self.merges);
+        reg.add("node_execs", self.node_execs);
+        reg.add("admitted", self.admitted);
+        reg.add("denied", self.denied);
+        reg.add("max_batch_formed", self.max_batch_formed);
+        for (name, v) in &self.extra {
+            reg.add(name, *v);
+        }
+    }
+
+    /// Convenience: a fresh [`Registry`] holding these stats.
+    pub fn registry(&self) -> Registry {
+        let mut reg = Registry::new();
+        self.fold_into(&mut reg);
+        reg
+    }
 }
 
 /// A batching/scheduling policy driven by the engine.
 pub trait Batcher {
+    /// Receive the tracer for this run. [`crate::sim::SimEngine`] (and the
+    /// real server) call this once before the first event; policies that
+    /// emit decision events (admit/deny, merge, preempt, slack estimates)
+    /// store the handle. The default ignores it.
+    fn attach_tracer(&mut self, _tracer: TracerRef) {}
+
     /// A request entered the inference queue (InfQ).
     fn on_arrival(&mut self, now: Nanos, reqs: &Reqs, id: ReqId);
 
@@ -171,4 +226,37 @@ pub trait Batcher {
 
     /// Display name for reports.
     fn name(&self) -> String;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_bump_registers_named_counters() {
+        let mut s = PolicyStats::default();
+        s.bump("window_expired", 1);
+        s.bump("window_expired", 2);
+        s.bump("batch_full", 5);
+        assert_eq!(s.extra_counter("window_expired"), 3);
+        assert_eq!(s.extra_counter("batch_full"), 5);
+        assert_eq!(s.extra_counter("absent"), 0);
+    }
+
+    #[test]
+    fn stats_fold_into_registry() {
+        let mut s = PolicyStats {
+            preemptions: 2,
+            merges: 7,
+            admitted: 11,
+            ..PolicyStats::default()
+        };
+        s.bump("drain_batches", 4);
+        let reg = s.registry();
+        assert_eq!(reg.counter("preemptions"), 2);
+        assert_eq!(reg.counter("merges"), 7);
+        assert_eq!(reg.counter("admitted"), 11);
+        assert_eq!(reg.counter("denied"), 0);
+        assert_eq!(reg.counter("drain_batches"), 4);
+    }
 }

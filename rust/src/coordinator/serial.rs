@@ -6,14 +6,26 @@ use std::collections::VecDeque;
 use super::policy::{
     Action, Batcher, Completion, Exec, PolicyStats, ReqId, Reqs, Transition,
 };
+use crate::telemetry::{self, Event, TracerRef};
 use crate::Nanos;
 
 /// FIFO, batch-size-1 scheduler.
-#[derive(Debug, Default)]
 pub struct Serial {
     queue: VecDeque<ReqId>,
     active: Option<ReqId>,
     stats: PolicyStats,
+    tracer: TracerRef,
+}
+
+impl Default for Serial {
+    fn default() -> Serial {
+        Serial {
+            queue: VecDeque::new(),
+            active: None,
+            stats: PolicyStats::default(),
+            tracer: telemetry::noop(),
+        }
+    }
 }
 
 impl Serial {
@@ -23,6 +35,10 @@ impl Serial {
 }
 
 impl Batcher for Serial {
+    fn attach_tracer(&mut self, tracer: TracerRef) {
+        self.tracer = tracer;
+    }
+
     fn on_arrival(&mut self, _now: Nanos, _reqs: &Reqs, id: ReqId) {
         self.queue.push_back(id);
     }
@@ -41,11 +57,18 @@ impl Batcher for Serial {
         }
     }
 
-    fn next_action(&mut self, _now: Nanos, reqs: &Reqs) -> Action {
+    fn next_action(&mut self, now: Nanos, reqs: &Reqs) -> Action {
         if self.active.is_none() {
             self.active = self.queue.pop_front();
-            if self.active.is_some() {
+            if let Some(id) = self.active {
                 self.stats.admitted += 1;
+                if self.tracer.enabled() {
+                    self.tracer.record(Event::Admitted {
+                        t: now,
+                        reqs: vec![id],
+                        preempting: false,
+                    });
+                }
             }
         }
         match self.active {

@@ -157,6 +157,17 @@ pub fn make_policy(cfg: &ExpConfig, table: Arc<LatencyTable>) -> Box<dyn Batcher
 
 /// Run a single seeded simulation.
 pub fn run_once(cfg: &ExpConfig, table: Arc<LatencyTable>, seed: u64) -> RunResult {
+    run_once_traced(cfg, table, seed, &crate::telemetry::noop())
+}
+
+/// [`run_once`] with lifecycle events emitted to `tracer` (the CLI's
+/// `trace` subcommand and the quickstart example run through here).
+pub fn run_once_traced(
+    cfg: &ExpConfig,
+    table: Arc<LatencyTable>,
+    seed: u64,
+    tracer: &crate::telemetry::TracerRef,
+) -> RunResult {
     let trace = Trace::generate_multi(
         &[table.graph.as_ref()],
         cfg.rate,
@@ -172,7 +183,7 @@ pub fn run_once(cfg: &ExpConfig, table: Arc<LatencyTable>, seed: u64) -> RunResu
         },
     );
     let mut policy = make_policy(cfg, table);
-    engine.run(&trace, policy.as_mut())
+    engine.run_traced(&trace, policy.as_mut(), tracer)
 }
 
 /// Run `cfg.runs` independent seeds and aggregate.

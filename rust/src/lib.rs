@@ -29,9 +29,12 @@ pub mod exp;
 pub mod metrics;
 pub mod model;
 pub mod npu;
+#[cfg(feature = "real")]
 pub mod runtime;
+#[cfg(feature = "real")]
 pub mod server;
 pub mod sim;
+pub mod telemetry;
 pub mod traffic;
 pub mod util;
 

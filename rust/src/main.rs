@@ -5,10 +5,14 @@
 //! * `simulate`  — run one policy × workload × arrival-rate point on the
 //!   cycle-level NPU simulator and print the paper-style metrics.
 //! * `sweep`     — Fig-12/13-style sweep over rates and policies.
+//! * `trace`     — run one traced simulation and export a Chrome
+//!   trace-event JSON (loadable in `ui.perfetto.dev`) with one track per
+//!   request, plus a per-request timeline summary and the full
+//!   counters/histogram registry.
 //! * `serve`     — REAL execution: load the AOT artifacts (built by
 //!   `make artifacts`), serve a Poisson stream of requests through the
 //!   PJRT node-level runtime with lazy batching, report latency and
-//!   throughput.
+//!   throughput. Requires building with `--features real`.
 //! * `workloads` — list the benchmark zoo with Table-II latencies.
 //!
 //! Examples:
@@ -16,6 +20,7 @@
 //! ```text
 //! lazybatchingd simulate --workload gnmt --policy lazy --rate 1000
 //! lazybatchingd sweep --workload transformer --rates 16,250,1000
+//! lazybatchingd trace --workload transformer --policy lazy --rate 500 --out trace.json
 //! lazybatchingd serve --rate 200 --requests 500 --policy lazy
 //! ```
 
@@ -23,10 +28,13 @@ use anyhow::{bail, Result};
 use lazybatching::exp::{self, DeviceKind, ExpConfig, PolicyCfg};
 use lazybatching::model::{LatencyTable, Workload, WMT_MEAN_IN, WMT_MEAN_OUT};
 use lazybatching::npu::systolic::SystolicModel;
+#[cfg(feature = "real")]
 use lazybatching::server::{self, ServeConfig, ServePolicy, ServeRequest};
+use lazybatching::telemetry::{perfetto, registry::ns_to_ms, RecordingTracer, TracerRef};
 use lazybatching::traffic::PoissonArrivals;
 use lazybatching::util::cli::Args;
 use lazybatching::util::json::Json;
+#[cfg(feature = "real")]
 use lazybatching::util::prng::Prng;
 use lazybatching::util::table::{f3, Table};
 use lazybatching::{MS, SEC};
@@ -38,6 +46,7 @@ fn main() {
     let result = match cmd {
         "simulate" => cmd_simulate(&args),
         "sweep" => cmd_sweep(&args),
+        "trace" => cmd_trace(&args),
         "serve" => cmd_serve(&args),
         "workloads" => cmd_workloads(),
         "help" | "--help" => {
@@ -58,12 +67,16 @@ fn main() {
 fn print_help() {
     println!(
         "lazybatchingd — SLA-aware batching for cloud ML inference\n\n\
-         USAGE: lazybatchingd <simulate|sweep|serve|workloads> [flags]\n\n\
+         USAGE: lazybatchingd <simulate|sweep|trace|serve|workloads> [flags]\n\n\
          simulate   --workload W --policy <serial|graphb|lazy|oracle> [--btw MS]\n\
          \x20          [--rate R] [--sla MS] [--runs N] [--duration S] [--gpu] [--json]\n\
          sweep      --workload W [--rates a,b,c] [--sla MS] [--runs N]\n\
+         trace      --workload W --policy P [--rate R] [--sla MS] [--duration S]\n\
+         \x20          [--seed N] [--out FILE.json] [--limit N]\n\
+         \x20          (Perfetto/chrome://tracing export + per-request timelines)\n\
          serve      [--artifacts DIR] [--rate R] [--requests N] [--sla MS]\n\
          \x20          [--policy <lazy|graphb|serial>] [--btw MS] [--max-batch B]\n\
+         \x20          (requires a binary built with --features real)\n\
          workloads  (list the zoo and Table-II single-batch latencies)"
     );
 }
@@ -182,6 +195,81 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_trace(args: &Args) -> Result<()> {
+    let cfg = ExpConfig {
+        workload: parse_workload(args)?,
+        policy: parse_policy(args)?,
+        rate: args.get_f64("rate", 250.0)?,
+        duration: (args.get_f64("duration", 0.5)? * SEC as f64) as u64,
+        runs: 1,
+        sla: args.get_u64("sla", 100)? * MS,
+        dec_timesteps: args.get_usize("dec-timesteps", 0)?,
+        max_batch: args.get_usize("max-batch", 64)?,
+        ..ExpConfig::default()
+    };
+    let out = args.get_or("out", "trace.json").to_string();
+    let table = exp::make_table(cfg.workload, cfg.device, cfg.max_batch);
+    let rec = RecordingTracer::new();
+    let tracer: TracerRef = rec.clone();
+    let result = exp::run_once_traced(&cfg, table, args.get_u64("seed", 42)?, &tracer);
+    let events = rec.take();
+    std::fs::write(&out, perfetto::chrome_trace(&events).render())?;
+    println!(
+        "{} / {} @ {} req/s: {} events for {} requests -> {out}\n\
+         (open in ui.perfetto.dev or chrome://tracing)\n",
+        cfg.workload.name(),
+        cfg.policy.name(),
+        cfg.rate,
+        events.len(),
+        result.latencies.len(),
+    );
+
+    // compact per-request timeline summary
+    let timelines = perfetto::request_timelines(&events);
+    let limit = args.get_usize("limit", 20)?;
+    let mut t = Table::new(vec![
+        "req", "arrival_ms", "queue_ms", "latency_ms", "execs", "max_batch", "preempted",
+    ]);
+    for tl in timelines.iter().take(limit) {
+        t.row(vec![
+            format!("{}", tl.req),
+            f3(ns_to_ms(tl.arrival)),
+            tl.queue_wait.map(|q| f3(ns_to_ms(q))).unwrap_or_else(|| "-".into()),
+            tl.latency.map(|l| f3(ns_to_ms(l))).unwrap_or_else(|| "-".into()),
+            format!("{}", tl.node_execs),
+            format!("{}", tl.max_batch),
+            format!("{}", tl.preempted),
+        ]);
+    }
+    t.print();
+    if timelines.len() > limit {
+        println!(
+            "... {} more requests (raise --limit to show)",
+            timelines.len() - limit
+        );
+    }
+
+    // counters + histogram registry
+    let mut reg = result.stats.registry();
+    reg.fold_histogram("queue_wait_ns", &result.queue_wait_hist);
+    reg.fold_histogram("batch_size", &result.batch_size_hist);
+    println!();
+    let mut ct = Table::new(vec!["counter", "value"]);
+    for (name, v) in reg.counters() {
+        ct.row(vec![name.clone(), format!("{v}")]);
+    }
+    ct.print();
+    println!(
+        "queue wait: mean {} ms, p99 <= {} ms | batch size: mean {:.2}, max {}",
+        f3(ns_to_ms(result.queue_wait_hist.mean() as u64)),
+        f3(ns_to_ms(result.queue_wait_hist.quantile(0.99))),
+        result.batch_size_hist.mean(),
+        result.batch_size_hist.max(),
+    );
+    Ok(())
+}
+
+#[cfg(feature = "real")]
 fn cmd_serve(args: &Args) -> Result<()> {
     let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts/minifmr"));
     let registry = lazybatching::runtime::NodeRegistry::load(&dir)?;
@@ -234,6 +322,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     t.row(vec!["preemptions".to_string(), format!("{}", report.preemptions)]);
     t.print();
     Ok(())
+}
+
+#[cfg(not(feature = "real"))]
+fn cmd_serve(_args: &Args) -> Result<()> {
+    bail!(
+        "this binary was built without the `real` feature (PJRT runtime); \
+         rebuild with `cargo build --release --features real` to serve AOT \
+         artifacts"
+    )
 }
 
 fn cmd_workloads() -> Result<()> {

@@ -3,11 +3,14 @@
 //! Wraps [`crate::sim::RunResult`]-level data into the aggregates the
 //! paper reports: average latency with p25/p75 error bars across runs
 //! (Fig. 12), throughput (Fig. 13), full latency CDFs and p99 tail
-//! (Fig. 14), and SLA violation rates per deadline (Fig. 15).
+//! (Fig. 14), and SLA violation rates per deadline (Fig. 15) — plus the
+//! telemetry roll-up: queue-wait and batch-size [`Histogram`]s merged
+//! across runs and every policy counter folded into one [`Registry`].
 
 use crate::sim::RunResult;
+use crate::telemetry::{Histogram, Registry};
 use crate::util::stats::{self, Summary};
-use crate::{Nanos, MS};
+use crate::Nanos;
 
 /// Aggregate over N independent simulation runs of one configuration.
 #[derive(Debug, Clone)]
@@ -18,8 +21,19 @@ pub struct Aggregate {
     pub run_throughput: Vec<f64>,
     /// Per-run p99 latency (ms).
     pub run_p99_ms: Vec<f64>,
-    /// Pooled latency samples across runs (ms) — for CDFs.
+    /// Pooled latency samples across runs (ms), **sorted ascending** — for
+    /// CDFs and percentiles without a per-call sort.
     pub pooled_ms: Vec<f64>,
+    /// Pooled latency samples in integer nanoseconds, sorted ascending —
+    /// SLA accounting compares in ns exactly like
+    /// [`RunResult::violation_rate`], never through a lossy ms float.
+    pub pooled_ns: Vec<Nanos>,
+    /// Queue-wait histogram merged across runs.
+    pub queue_wait_hist: Histogram,
+    /// Batch-size histogram merged across runs.
+    pub batch_size_hist: Histogram,
+    /// Every policy counter (core + named extras) summed across runs.
+    pub stats: Registry,
 }
 
 impl Aggregate {
@@ -29,6 +43,10 @@ impl Aggregate {
             run_throughput: Vec::with_capacity(runs.len()),
             run_p99_ms: Vec::with_capacity(runs.len()),
             pooled_ms: Vec::new(),
+            pooled_ns: Vec::new(),
+            queue_wait_hist: Histogram::queue_wait(),
+            batch_size_hist: Histogram::batch_size(),
+            stats: Registry::new(),
         };
         for r in runs {
             let ms = r.latencies_ms();
@@ -37,7 +55,13 @@ impl Aggregate {
             agg.run_p99_ms.push(s.p99);
             agg.run_throughput.push(r.throughput());
             agg.pooled_ms.extend_from_slice(&ms);
+            agg.pooled_ns.extend(r.latencies.iter().map(|&(_, l)| l));
+            agg.queue_wait_hist.merge(&r.queue_wait_hist);
+            agg.batch_size_hist.merge(&r.batch_size_hist);
+            r.stats.fold_into(&mut agg.stats);
         }
+        agg.pooled_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        agg.pooled_ns.sort_unstable();
         agg
     }
 
@@ -71,28 +95,27 @@ impl Aggregate {
 
     /// Pooled p99 tail latency (Fig. 14's headline number).
     pub fn p99_ms(&self) -> f64 {
-        let mut v = self.pooled_ms.clone();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        if v.is_empty() {
+        if self.pooled_ms.is_empty() {
             0.0
         } else {
-            stats::percentile_sorted(&v, 99.0)
+            stats::percentile_sorted(&self.pooled_ms, 99.0)
         }
     }
 
-    /// Fraction of pooled requests over the deadline.
+    /// Fraction of pooled requests over the deadline. Compares integer
+    /// nanoseconds (same semantics as [`RunResult::violation_rate`]): a
+    /// latency of exactly `sla` is *not* a violation.
     pub fn violation_rate(&self, sla: Nanos) -> f64 {
-        if self.pooled_ms.is_empty() {
+        if self.pooled_ns.is_empty() {
             return 0.0;
         }
-        let sla_ms = sla as f64 / MS as f64;
-        self.pooled_ms.iter().filter(|&&l| l > sla_ms).count() as f64
-            / self.pooled_ms.len() as f64
+        let within = self.pooled_ns.partition_point(|&l| l <= sla);
+        (self.pooled_ns.len() - within) as f64 / self.pooled_ns.len() as f64
     }
 
     /// Empirical CDF over pooled latencies at the given thresholds (ms).
     pub fn cdf(&self, thresholds_ms: &[f64]) -> Vec<f64> {
-        stats::cdf_at(&self.pooled_ms, thresholds_ms)
+        stats::cdf_at_sorted(&self.pooled_ms, thresholds_ms)
     }
 }
 
@@ -100,19 +123,31 @@ impl Aggregate {
 mod tests {
     use super::*;
     use crate::coordinator::PolicyStats;
+    use crate::MS;
 
-    fn fake_run(lats_ms: &[f64]) -> RunResult {
+    fn fake_run_ns(lats_ns: &[Nanos]) -> RunResult {
         RunResult {
-            latencies: lats_ms
+            latencies: lats_ns
                 .iter()
                 .enumerate()
-                .map(|(i, &l)| (i as u64, (l * MS as f64) as Nanos))
+                .map(|(i, &l)| (i as u64, l))
                 .collect(),
             makespan: crate::SEC,
             busy: crate::SEC / 2,
             node_execs: 10,
             stats: PolicyStats::default(),
+            queue_wait_hist: Histogram::queue_wait(),
+            batch_size_hist: Histogram::batch_size(),
         }
+    }
+
+    fn fake_run(lats_ms: &[f64]) -> RunResult {
+        fake_run_ns(
+            &lats_ms
+                .iter()
+                .map(|&l| (l * MS as f64) as Nanos)
+                .collect::<Vec<_>>(),
+        )
     }
 
     #[test]
@@ -121,6 +156,7 @@ mod tests {
         let a = Aggregate::from_runs(&runs);
         assert!((a.mean_latency_ms() - 3.0).abs() < 1e-9);
         assert_eq!(a.pooled_ms.len(), 6);
+        assert_eq!(a.pooled_ns.len(), 6);
         assert!((a.mean_throughput() - 3.0).abs() < 1e-9);
         let (lo, hi) = a.latency_p25_p75();
         assert!(lo <= a.mean_latency_ms() && a.mean_latency_ms() <= hi);
@@ -135,6 +171,18 @@ mod tests {
     }
 
     #[test]
+    fn violation_rate_matches_run_result_at_exact_boundaries() {
+        // Integer-ns semantics: exactly-at-deadline is not a violation,
+        // one nanosecond over is. The old f64-ms comparison got these
+        // boundary cases wrong whenever the conversion rounded.
+        let sla = 40 * MS;
+        let run = fake_run_ns(&[sla - 1, sla, sla + 1]);
+        let a = Aggregate::from_runs(&[run.clone()]);
+        assert_eq!(a.violation_rate(sla), run.violation_rate(sla));
+        assert!((a.violation_rate(sla) - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
     fn cdf_monotone() {
         let a = Aggregate::from_runs(&[fake_run(&[1.0, 2.0, 3.0, 4.0])]);
         let c = a.cdf(&[0.5, 1.5, 2.5, 3.5, 4.5]);
@@ -142,5 +190,25 @@ mod tests {
             assert!(w[0] <= w[1]);
         }
         assert_eq!(*c.last().unwrap(), 1.0);
+    }
+
+    #[test]
+    fn histograms_and_stats_merge_across_runs() {
+        let mut r1 = fake_run(&[1.0, 2.0]);
+        r1.queue_wait_hist.record(5 * crate::US);
+        r1.batch_size_hist.record(4);
+        r1.stats.admitted = 2;
+        r1.stats.bump("window_expired", 1);
+        let mut r2 = fake_run(&[3.0]);
+        r2.queue_wait_hist.record(9 * crate::US);
+        r2.batch_size_hist.record(8);
+        r2.stats.admitted = 1;
+        r2.stats.bump("window_expired", 2);
+        let a = Aggregate::from_runs(&[r1, r2]);
+        assert_eq!(a.queue_wait_hist.count(), 2);
+        assert_eq!(a.batch_size_hist.count(), 2);
+        assert_eq!(a.batch_size_hist.max(), 8);
+        assert_eq!(a.stats.counter("admitted"), 3);
+        assert_eq!(a.stats.counter("window_expired"), 3);
     }
 }

@@ -3,6 +3,6 @@
 pub mod real;
 
 pub use real::{
-    measured_table, serve_trace, serving_graph, ServeConfig, ServePolicy, ServeReport,
-    ServeRequest,
+    measured_table, serve_trace, serve_trace_traced, serving_graph, ServeConfig,
+    ServePolicy, ServeReport, ServeRequest,
 };

@@ -19,6 +19,7 @@ use crate::coordinator::{GraphBatching, LazyBatching, Serial, SlackMode};
 use crate::model::graph::{GemmSpec, ModelGraph, NodeTemplate};
 use crate::model::LatencyTable;
 use crate::runtime::{Activation, NodeRegistry};
+use crate::telemetry::{self, Event, TracerRef};
 use crate::traffic::RequestSpec;
 use crate::util::stats::Summary;
 use crate::Nanos;
@@ -143,6 +144,18 @@ pub fn serve_trace(
     cfg: &ServeConfig,
     trace: &[(Nanos, ServeRequest)],
 ) -> Result<ServeReport> {
+    serve_trace_traced(registry, cfg, trace, &telemetry::noop())
+}
+
+/// [`serve_trace`] with lifecycle events emitted to `tracer`. Timestamps
+/// are wall-clock nanoseconds since serving started, so the same
+/// [`crate::telemetry::perfetto`] exporter renders real runs too.
+pub fn serve_trace_traced(
+    registry: &NodeRegistry,
+    cfg: &ServeConfig,
+    trace: &[(Nanos, ServeRequest)],
+    tracer: &TracerRef,
+) -> Result<ServeReport> {
     let graph = Arc::new(serving_graph(registry));
     let table = measured_table(registry, graph.clone(), cfg.max_batch, cfg.profile_reps)?;
 
@@ -161,6 +174,12 @@ pub fn serve_trace(
         )),
         ServePolicy::Serial => Box::new(Serial::new()),
     };
+    policy.attach_tracer(tracer.clone());
+    if tracer.enabled() {
+        tracer.record(Event::RunStart {
+            policy: policy.name(),
+        });
+    }
 
     // ---- request generator thread ----
     let (tx, rx) = mpsc::channel::<(u64, Vec<i32>)>();
@@ -204,6 +223,15 @@ pub fn serve_trace(
                 out_len: 1,
                 model_idx: 0,
             });
+            if tracer.enabled() {
+                tracer.record(Event::Arrival {
+                    t: now,
+                    req: id,
+                    model: 0,
+                    in_len: 1,
+                    out_len: 1,
+                });
+            }
             store.insert(id, Activation::Tokens(tokens));
             policy.on_arrival(now, &reqs, id);
         }
@@ -211,6 +239,12 @@ pub fn serve_trace(
         let now = now_ns(&start);
         match policy.next_action(now, &reqs) {
             Action::Execute(exec) => {
+                for &id in &exec.reqs {
+                    let st = reqs.get_mut(id);
+                    if st.first_issue.is_none() {
+                        st.first_issue = Some(now);
+                    }
+                }
                 // gather, run, scatter
                 let inputs: Vec<&Activation> = exec
                     .reqs
@@ -235,6 +269,15 @@ pub fn serve_trace(
                     }
                 }
                 let done_at = now_ns(&start);
+                if tracer.enabled() {
+                    tracer.record(Event::NodeExec {
+                        start: now,
+                        dur: done_at - now,
+                        tpos: exec.tpos,
+                        members: exec.reqs.clone(),
+                        padded: exec.padded,
+                    });
+                }
                 let mut released = Vec::new();
                 policy.on_complete(
                     done_at,
@@ -245,8 +288,20 @@ pub fn serve_trace(
                 for id in released {
                     let st = reqs.get_mut(id);
                     st.released = true;
-                    latencies[id as usize] =
-                        (done_at - st.spec.arrival) as f64 / crate::MS as f64;
+                    let latency = done_at - st.spec.arrival;
+                    latencies[id as usize] = latency as f64 / crate::MS as f64;
+                    if tracer.enabled() {
+                        let queue_wait = st
+                            .first_issue
+                            .map(|f| f - st.spec.arrival)
+                            .unwrap_or(0);
+                        tracer.record(Event::Release {
+                            t: done_at,
+                            req: id,
+                            latency,
+                            queue_wait,
+                        });
+                    }
                     if let Some(Activation::Logits(l)) = store.remove(&id) {
                         outputs[id as usize] = l;
                     }
@@ -269,6 +324,15 @@ pub fn serve_trace(
                             out_len: 1,
                             model_idx: 0,
                         });
+                        if tracer.enabled() {
+                            tracer.record(Event::Arrival {
+                                t,
+                                req: id,
+                                model: 0,
+                                in_len: 1,
+                                out_len: 1,
+                            });
+                        }
                         store.insert(id, Activation::Tokens(tokens));
                         policy.on_arrival(t, &reqs, id);
                     }

@@ -1,0 +1,173 @@
+//! Structured lifecycle events.
+//!
+//! One [`Event`] is emitted per observable step of a request's journey
+//! through the server: arrival, admission (or denial) into the in-flight
+//! stack, every node execution it rides in, the scheduling decisions that
+//! shaped that ride (merge, preempt, stall, the slack estimate that gated
+//! admission), and finally release. Timestamps are integer nanoseconds —
+//! virtual time on the simulator, wall-clock-since-start on the real
+//! serving path — so the same exporter serves both.
+
+use crate::coordinator::policy::ReqId;
+use crate::Nanos;
+
+/// Why the policy refused to lazily batch the pending inputs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DenyReason {
+    /// Eq. 2: admitting would push some involved request's predicted
+    /// slack negative.
+    SlackExhausted,
+    /// The catch-up cost/benefit test: preempting the in-flight stack
+    /// would cost more stall time than the candidates would save.
+    PreemptionNotWorthIt,
+}
+
+impl DenyReason {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DenyReason::SlackExhausted => "slack_exhausted",
+            DenyReason::PreemptionNotWorthIt => "preemption_not_worth_it",
+        }
+    }
+}
+
+/// One structured lifecycle event.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    /// Emitted once at the start of a traced run.
+    RunStart { policy: String },
+    /// A request entered the inference queue.
+    Arrival {
+        t: Nanos,
+        req: ReqId,
+        model: usize,
+        in_len: usize,
+        out_len: usize,
+    },
+    /// The policy admitted `reqs` into the in-flight stack. `preempting`
+    /// is true when an active batch was already executing.
+    Admitted {
+        t: Nanos,
+        reqs: Vec<ReqId>,
+        preempting: bool,
+    },
+    /// The policy refused to admit any pending input this boundary.
+    Denied {
+        t: Nanos,
+        pending: usize,
+        reason: DenyReason,
+    },
+    /// The slack predictor's estimate for a candidate admission (lazy
+    /// policy only). Join against [`Event::Release`] latencies to compare
+    /// the estimate with the actual outcome.
+    SlackEstimate {
+        t: Nanos,
+        reqs: Vec<ReqId>,
+        predicted_slack: i64,
+    },
+    /// `merged` top-of-stack sub-batch pairs reached a common node and
+    /// were folded together; `depth_after` entries remain.
+    Merge {
+        t: Nanos,
+        merged: u64,
+        depth_after: usize,
+    },
+    /// Newly admitted inputs preempted the active batch.
+    Preempt {
+        t: Nanos,
+        preempted: Vec<ReqId>,
+        admitted: Vec<ReqId>,
+    },
+    /// The policy put the processor to sleep with work still queued
+    /// (e.g. graph batching waiting out its time-window).
+    Stall {
+        t: Nanos,
+        until: Option<Nanos>,
+        queued: usize,
+    },
+    /// One node execution, recorded at completion.
+    NodeExec {
+        start: Nanos,
+        dur: Nanos,
+        tpos: usize,
+        members: Vec<ReqId>,
+        padded: bool,
+    },
+    /// The response left the server. `queue_wait` is the time from
+    /// arrival to the request's first node issue.
+    Release {
+        t: Nanos,
+        req: ReqId,
+        latency: Nanos,
+        queue_wait: Nanos,
+    },
+}
+
+impl Event {
+    /// The event's timestamp (slice-start for [`Event::NodeExec`]).
+    pub fn timestamp(&self) -> Nanos {
+        match self {
+            Event::RunStart { .. } => 0,
+            Event::Arrival { t, .. }
+            | Event::Admitted { t, .. }
+            | Event::Denied { t, .. }
+            | Event::SlackEstimate { t, .. }
+            | Event::Merge { t, .. }
+            | Event::Preempt { t, .. }
+            | Event::Stall { t, .. }
+            | Event::Release { t, .. } => *t,
+            Event::NodeExec { start, .. } => *start,
+        }
+    }
+
+    /// Short kind tag (used by summaries and tests).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Event::RunStart { .. } => "run_start",
+            Event::Arrival { .. } => "arrival",
+            Event::Admitted { .. } => "admitted",
+            Event::Denied { .. } => "denied",
+            Event::SlackEstimate { .. } => "slack_estimate",
+            Event::Merge { .. } => "merge",
+            Event::Preempt { .. } => "preempt",
+            Event::Stall { .. } => "stall",
+            Event::NodeExec { .. } => "node_exec",
+            Event::Release { .. } => "release",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timestamps_and_kinds() {
+        let e = Event::NodeExec {
+            start: 10,
+            dur: 5,
+            tpos: 2,
+            members: vec![0, 1],
+            padded: false,
+        };
+        assert_eq!(e.timestamp(), 10);
+        assert_eq!(e.kind(), "node_exec");
+        let r = Event::Release {
+            t: 99,
+            req: 1,
+            latency: 89,
+            queue_wait: 4,
+        };
+        assert_eq!(r.timestamp(), 99);
+        assert_eq!(r.kind(), "release");
+    }
+
+    #[test]
+    fn deny_reason_labels() {
+        assert_eq!(DenyReason::SlackExhausted.as_str(), "slack_exhausted");
+        assert_eq!(
+            DenyReason::PreemptionNotWorthIt.as_str(),
+            "preemption_not_worth_it"
+        );
+    }
+}

@@ -1,0 +1,64 @@
+//! # Node-granularity telemetry
+//!
+//! LazyBatching's scheduling decisions — stall, merge, preempt — happen at
+//! *node* granularity, so run-level aggregates ([`crate::metrics`]) cannot
+//! explain **why** an individual request blew its SLA or which slack-model
+//! decision caused a merge. This module records the full lifecycle of
+//! every request and every node execution as structured events, with
+//! near-zero cost when disabled.
+//!
+//! ## Architecture
+//!
+//! ```text
+//!   SimEngine::run_traced ─┐                       ┌─ perfetto::chrome_trace
+//!   server::serve_trace_traced ─┤→ Tracer (events) ─┤→ perfetto::request_timelines
+//!   policies (via attach_tracer)┘                   └─ registry::Registry (counters/hists)
+//! ```
+//!
+//! * [`tracer`] — the [`Tracer`] trait. [`NoopTracer`] (the default) makes
+//!   every emission site a single `enabled()` check returning `false`;
+//!   [`RecordingTracer`] buffers events for export. Policies receive the
+//!   tracer through `Batcher::attach_tracer`, which
+//!   `SimEngine::run_traced` and the real server call for you.
+//! * [`event`] — the [`Event`] vocabulary: arrival, admission/denial
+//!   (with [`event::DenyReason`]), queue-wait, node execution (policy,
+//!   node id, batch size, members, start/duration in ns), stall / merge /
+//!   preempt decisions, the lazy policy's slack estimate, and release.
+//! * [`perfetto`] — Chrome trace-event JSON export (loads in
+//!   `ui.perfetto.dev` / `chrome://tracing`): one track per request, one
+//!   for the processor, instant markers for scheduling decisions, and a
+//!   counter track for predicted slack. Plus the compact per-request
+//!   timeline summary the CLI prints.
+//! * [`registry`] — generalized named counters + fixed-bucket
+//!   [`Histogram`]s. `PolicyStats::fold_into` lands the scheduler's core
+//!   counters (and policy-registered named extras) here, and
+//!   `RunResult` carries queue-wait and batch-size histograms built on
+//!   the same type.
+//!
+//! ## Usage
+//!
+//! From the CLI (writes Perfetto JSON and prints per-request timelines):
+//!
+//! ```text
+//! lazybatchingd trace --workload transformer --policy lazy --rate 500 \
+//!     --out trace.json
+//! ```
+//!
+//! Programmatically:
+//!
+//! ```text
+//! let rec = RecordingTracer::new();
+//! let tracer: TracerRef = rec.clone();
+//! let result = engine.run_traced(&trace, policy.as_mut(), &tracer);
+//! let events = rec.take();
+//! std::fs::write("trace.json", perfetto::chrome_trace(&events).render())?;
+//! ```
+
+pub mod event;
+pub mod perfetto;
+pub mod registry;
+pub mod tracer;
+
+pub use event::{DenyReason, Event};
+pub use registry::{Histogram, Registry};
+pub use tracer::{noop, NoopTracer, RecordingTracer, Tracer, TracerRef};

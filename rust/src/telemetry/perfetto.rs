@@ -1,0 +1,656 @@
+//! Chrome trace-event (Perfetto-loadable) export and compact timelines.
+//!
+//! [`chrome_trace`] turns a recorded event stream into the Chrome
+//! trace-event JSON format (the `{"traceEvents": [...]}` flavor), which
+//! `ui.perfetto.dev` and `chrome://tracing` both load directly:
+//!
+//! * **processor track** (pid 0 / tid 0) — one `X` (complete) slice per
+//!   node execution, named `n<tpos> b=<batch>`, with the template
+//!   position, batch size, member ids and padding flag in `args`; instant
+//!   markers for merge / preempt / deny decisions; a `C` (counter) track
+//!   for the lazy policy's predicted slack.
+//! * **one track per request** (pid 1 / tid = request id) — a `queue`
+//!   slice covering arrival → first node issue, one slice per node
+//!   execution the request rode in (batch size annotated), and an instant
+//!   marker at release.
+//!
+//! Timestamps are microseconds (`ts`/`dur` floats), converted from the
+//! event stream's integer nanoseconds. Events are emitted sorted by
+//! timestamp so consumers that stream without buffering stay happy.
+//!
+//! [`request_timelines`] reduces the same stream to one summary row per
+//! request — the compact form the `trace` CLI subcommand prints.
+
+use super::event::Event;
+use crate::coordinator::policy::ReqId;
+use crate::util::json::Json;
+use crate::Nanos;
+
+/// pid of the processor track group.
+const PID_PROCESSOR: u64 = 0;
+/// pid of the per-request track group.
+const PID_REQUESTS: u64 = 1;
+
+fn us(ns: Nanos) -> f64 {
+    ns as f64 / 1_000.0
+}
+
+fn ids_json(ids: &[ReqId]) -> Json {
+    Json::Arr(ids.iter().map(|&id| Json::Int(id as i64)).collect())
+}
+
+/// One row of the `traceEvents` array, kept sortable by timestamp.
+struct Row {
+    ts: Nanos,
+    json: Json,
+}
+
+fn complete(
+    pid: u64,
+    tid: u64,
+    name: String,
+    cat: &str,
+    start: Nanos,
+    dur: Nanos,
+    args: Json,
+) -> Row {
+    Row {
+        ts: start,
+        json: Json::obj()
+            .set("name", name)
+            .set("cat", cat)
+            .set("ph", "X")
+            .set("ts", us(start))
+            .set("dur", us(dur))
+            .set("pid", pid)
+            .set("tid", tid)
+            .set("args", args),
+    }
+}
+
+fn instant(pid: u64, tid: u64, name: &str, cat: &str, t: Nanos, args: Json) -> Row {
+    Row {
+        ts: t,
+        json: Json::obj()
+            .set("name", name)
+            .set("cat", cat)
+            .set("ph", "i")
+            .set("s", "t")
+            .set("ts", us(t))
+            .set("pid", pid)
+            .set("tid", tid)
+            .set("args", args),
+    }
+}
+
+fn counter(pid: u64, name: &str, t: Nanos, series: &str, value: f64) -> Row {
+    Row {
+        ts: t,
+        json: Json::obj()
+            .set("name", name)
+            .set("ph", "C")
+            .set("ts", us(t))
+            .set("pid", pid)
+            .set("args", Json::obj().set(series, value)),
+    }
+}
+
+fn metadata(pid: u64, tid: Option<u64>, which: &str, name: String) -> Json {
+    let mut j = Json::obj()
+        .set("name", which)
+        .set("ph", "M")
+        .set("pid", pid)
+        .set("args", Json::obj().set("name", name));
+    if let Some(tid) = tid {
+        j = j.set("tid", tid);
+    }
+    j
+}
+
+/// Render a recorded event stream as Chrome trace-event JSON.
+pub fn chrome_trace(events: &[Event]) -> Json {
+    let mut rows: Vec<Row> = Vec::with_capacity(events.len() * 2);
+    let mut request_ids: Vec<ReqId> = Vec::new();
+    let mut policy = String::from("unknown");
+
+    for ev in events {
+        match ev {
+            Event::RunStart { policy: p } => {
+                policy = p.clone();
+                rows.push(instant(
+                    PID_PROCESSOR,
+                    0,
+                    "run_start",
+                    "meta",
+                    0,
+                    Json::obj().set("policy", p.clone()),
+                ));
+            }
+            Event::Arrival {
+                t,
+                req,
+                model,
+                in_len,
+                out_len,
+            } => {
+                request_ids.push(*req);
+                rows.push(instant(
+                    PID_REQUESTS,
+                    *req,
+                    "arrival",
+                    "lifecycle",
+                    *t,
+                    Json::obj()
+                        .set("model", *model)
+                        .set("in_len", *in_len)
+                        .set("out_len", *out_len),
+                ));
+            }
+            Event::Admitted { t, reqs, preempting } => {
+                rows.push(instant(
+                    PID_PROCESSOR,
+                    0,
+                    "admit",
+                    "decision",
+                    *t,
+                    Json::obj()
+                        .set("reqs", ids_json(reqs))
+                        .set("preempting", *preempting),
+                ));
+            }
+            Event::Denied { t, pending, reason } => {
+                rows.push(instant(
+                    PID_PROCESSOR,
+                    0,
+                    "deny",
+                    "decision",
+                    *t,
+                    Json::obj()
+                        .set("pending", *pending)
+                        .set("reason", reason.as_str()),
+                ));
+            }
+            Event::SlackEstimate {
+                t,
+                reqs,
+                predicted_slack,
+            } => {
+                rows.push(counter(
+                    PID_PROCESSOR,
+                    "predicted_slack_ms",
+                    *t,
+                    "slack",
+                    *predicted_slack as f64 / crate::MS as f64,
+                ));
+                rows.push(instant(
+                    PID_PROCESSOR,
+                    0,
+                    "slack_estimate",
+                    "decision",
+                    *t,
+                    Json::obj()
+                        .set("reqs", ids_json(reqs))
+                        .set("predicted_slack_ns", *predicted_slack),
+                ));
+            }
+            Event::Merge {
+                t,
+                merged,
+                depth_after,
+            } => {
+                rows.push(instant(
+                    PID_PROCESSOR,
+                    0,
+                    "merge",
+                    "decision",
+                    *t,
+                    Json::obj()
+                        .set("merged", *merged)
+                        .set("depth_after", *depth_after),
+                ));
+            }
+            Event::Preempt {
+                t,
+                preempted,
+                admitted,
+            } => {
+                rows.push(instant(
+                    PID_PROCESSOR,
+                    0,
+                    "preempt",
+                    "decision",
+                    *t,
+                    Json::obj()
+                        .set("preempted", ids_json(preempted))
+                        .set("admitted", ids_json(admitted)),
+                ));
+            }
+            Event::Stall { t, until, queued } => {
+                let args = Json::obj().set("queued", *queued).set(
+                    "until_ns",
+                    match until {
+                        Some(u) => Json::Int(*u as i64),
+                        None => Json::Null,
+                    },
+                );
+                rows.push(instant(PID_PROCESSOR, 0, "stall", "decision", *t, args));
+            }
+            Event::NodeExec {
+                start,
+                dur,
+                tpos,
+                members,
+                padded,
+            } => {
+                let name = format!("n{} b={}", tpos, members.len());
+                rows.push(complete(
+                    PID_PROCESSOR,
+                    0,
+                    name,
+                    "exec",
+                    *start,
+                    *dur,
+                    Json::obj()
+                        .set("tpos", *tpos)
+                        .set("batch", members.len())
+                        .set("members", ids_json(members))
+                        .set("padded", *padded)
+                        .set("policy", policy.clone()),
+                ));
+                for &id in members {
+                    rows.push(complete(
+                        PID_REQUESTS,
+                        id,
+                        format!("n{tpos}"),
+                        "exec",
+                        *start,
+                        *dur,
+                        Json::obj().set("batch", members.len()).set("tpos", *tpos),
+                    ));
+                }
+            }
+            Event::Release {
+                t,
+                req,
+                latency,
+                queue_wait,
+            } => {
+                if *queue_wait > 0 {
+                    let arrival = t.saturating_sub(*latency);
+                    rows.push(complete(
+                        PID_REQUESTS,
+                        *req,
+                        "queue".to_string(),
+                        "wait",
+                        arrival,
+                        *queue_wait,
+                        Json::obj().set("queue_wait_ns", *queue_wait),
+                    ));
+                }
+                rows.push(instant(
+                    PID_REQUESTS,
+                    *req,
+                    "release",
+                    "lifecycle",
+                    *t,
+                    Json::obj()
+                        .set("latency_ns", *latency)
+                        .set("queue_wait_ns", *queue_wait),
+                ));
+            }
+        }
+    }
+
+    rows.sort_by_key(|r| r.ts);
+
+    let mut trace_events = Vec::with_capacity(rows.len() + request_ids.len() + 4);
+    // metadata first: track names for the processor and every request
+    trace_events.push(metadata(PID_PROCESSOR, None, "process_name", "processor".into()));
+    trace_events.push(metadata(PID_PROCESSOR, Some(0), "thread_name", policy.clone()));
+    trace_events.push(metadata(PID_REQUESTS, None, "process_name", "requests".into()));
+    request_ids.sort_unstable();
+    request_ids.dedup();
+    for id in &request_ids {
+        trace_events.push(metadata(PID_REQUESTS, Some(*id), "thread_name", format!("req {id}")));
+    }
+    trace_events.extend(rows.into_iter().map(|r| r.json));
+
+    Json::obj()
+        .set("traceEvents", Json::Arr(trace_events))
+        .set("displayTimeUnit", "ms")
+}
+
+/// Per-request compact timeline summary.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RequestTimeline {
+    pub req: ReqId,
+    pub arrival: Nanos,
+    pub release: Option<Nanos>,
+    pub latency: Option<Nanos>,
+    pub queue_wait: Option<Nanos>,
+    /// Node executions this request rode in.
+    pub node_execs: u32,
+    /// Largest batch the request was ever part of.
+    pub max_batch: u32,
+    /// Times the request's sub-batch was preempted by later arrivals.
+    pub preempted: u32,
+}
+
+/// Reduce an event stream to one summary row per request (arrival order).
+pub fn request_timelines(events: &[Event]) -> Vec<RequestTimeline> {
+    let mut rows: Vec<RequestTimeline> = Vec::new();
+    let find = |rows: &mut Vec<RequestTimeline>, id: ReqId| -> Option<usize> {
+        rows.iter().position(|r| r.req == id)
+    };
+    for ev in events {
+        match ev {
+            Event::Arrival { t, req, .. } => rows.push(RequestTimeline {
+                req: *req,
+                arrival: *t,
+                release: None,
+                latency: None,
+                queue_wait: None,
+                node_execs: 0,
+                max_batch: 0,
+                preempted: 0,
+            }),
+            Event::NodeExec { members, .. } => {
+                for &id in members {
+                    if let Some(i) = find(&mut rows, id) {
+                        rows[i].node_execs += 1;
+                        rows[i].max_batch = rows[i].max_batch.max(members.len() as u32);
+                    }
+                }
+            }
+            Event::Preempt { preempted, .. } => {
+                for &id in preempted {
+                    if let Some(i) = find(&mut rows, id) {
+                        rows[i].preempted += 1;
+                    }
+                }
+            }
+            Event::Release {
+                t,
+                req,
+                latency,
+                queue_wait,
+            } => {
+                if let Some(i) = find(&mut rows, *req) {
+                    rows[i].release = Some(*t);
+                    rows[i].latency = Some(*latency);
+                    rows[i].queue_wait = Some(*queue_wait);
+                }
+            }
+            _ => {}
+        }
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::event::DenyReason;
+
+    /// Minimal recursive-descent JSON validator (the crate deliberately
+    /// ships no JSON parser; tests verify well-formedness structurally).
+    fn skip_ws(s: &[u8], mut i: usize) -> usize {
+        while i < s.len() && (s[i] as char).is_whitespace() {
+            i += 1;
+        }
+        i
+    }
+
+    fn parse_value(s: &[u8], i: usize) -> Result<usize, String> {
+        let i = skip_ws(s, i);
+        let Some(&c) = s.get(i) else {
+            return Err("eof".into());
+        };
+        match c {
+            b'{' => {
+                let mut i = skip_ws(s, i + 1);
+                if s.get(i) == Some(&b'}') {
+                    return Ok(i + 1);
+                }
+                loop {
+                    i = parse_string(s, skip_ws(s, i))?;
+                    i = skip_ws(s, i);
+                    if s.get(i) != Some(&b':') {
+                        return Err(format!("expected ':' at {i}"));
+                    }
+                    i = parse_value(s, i + 1)?;
+                    i = skip_ws(s, i);
+                    match s.get(i) {
+                        Some(&b',') => i += 1,
+                        Some(&b'}') => return Ok(i + 1),
+                        _ => return Err(format!("expected ',' or '}}' at {i}")),
+                    }
+                }
+            }
+            b'[' => {
+                let mut i = skip_ws(s, i + 1);
+                if s.get(i) == Some(&b']') {
+                    return Ok(i + 1);
+                }
+                loop {
+                    i = parse_value(s, i)?;
+                    i = skip_ws(s, i);
+                    match s.get(i) {
+                        Some(&b',') => i += 1,
+                        Some(&b']') => return Ok(i + 1),
+                        _ => return Err(format!("expected ',' or ']' at {i}")),
+                    }
+                }
+            }
+            b'"' => parse_string(s, i),
+            b't' => expect(s, i, b"true"),
+            b'f' => expect(s, i, b"false"),
+            b'n' => expect(s, i, b"null"),
+            _ => {
+                let mut j = i;
+                while j < s.len()
+                    && matches!(s[j], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+                {
+                    j += 1;
+                }
+                if j == i {
+                    return Err(format!("bad value at {i}"));
+                }
+                std::str::from_utf8(&s[i..j])
+                    .ok()
+                    .and_then(|t| t.parse::<f64>().ok())
+                    .ok_or_else(|| format!("bad number at {i}"))?;
+                Ok(j)
+            }
+        }
+    }
+
+    fn parse_string(s: &[u8], i: usize) -> Result<usize, String> {
+        if s.get(i) != Some(&b'"') {
+            return Err(format!("expected string at {i}"));
+        }
+        let mut i = i + 1;
+        while let Some(&c) = s.get(i) {
+            match c {
+                b'\\' => i += 2,
+                b'"' => return Ok(i + 1),
+                _ => i += 1,
+            }
+        }
+        Err("unterminated string".into())
+    }
+
+    fn expect(s: &[u8], i: usize, lit: &[u8]) -> Result<usize, String> {
+        if s.len() >= i + lit.len() && &s[i..i + lit.len()] == lit {
+            Ok(i + lit.len())
+        } else {
+            Err(format!("bad literal at {i}"))
+        }
+    }
+
+    fn assert_valid_json(text: &str) {
+        let s = text.as_bytes();
+        let end = parse_value(s, 0).unwrap_or_else(|e| panic!("invalid JSON: {e}\n{text}"));
+        assert_eq!(skip_ws(s, end), s.len(), "trailing garbage");
+    }
+
+    fn sample_events() -> Vec<Event> {
+        vec![
+            Event::RunStart {
+                policy: "LazyB".into(),
+            },
+            Event::Arrival {
+                t: 0,
+                req: 0,
+                model: 0,
+                in_len: 1,
+                out_len: 1,
+            },
+            Event::Admitted {
+                t: 0,
+                reqs: vec![0],
+                preempting: false,
+            },
+            Event::NodeExec {
+                start: 0,
+                dur: 1000,
+                tpos: 0,
+                members: vec![0],
+                padded: false,
+            },
+            Event::Arrival {
+                t: 500,
+                req: 1,
+                model: 0,
+                in_len: 1,
+                out_len: 1,
+            },
+            Event::SlackEstimate {
+                t: 1000,
+                reqs: vec![1],
+                predicted_slack: 42 * crate::MS as i64,
+            },
+            Event::Preempt {
+                t: 1000,
+                preempted: vec![0],
+                admitted: vec![1],
+            },
+            Event::Admitted {
+                t: 1000,
+                reqs: vec![1],
+                preempting: true,
+            },
+            Event::NodeExec {
+                start: 1000,
+                dur: 900,
+                tpos: 0,
+                members: vec![1],
+                padded: false,
+            },
+            Event::Merge {
+                t: 1900,
+                merged: 1,
+                depth_after: 1,
+            },
+            Event::NodeExec {
+                start: 1900,
+                dur: 1500,
+                tpos: 1,
+                members: vec![0, 1],
+                padded: false,
+            },
+            Event::Denied {
+                t: 3400,
+                pending: 2,
+                reason: DenyReason::SlackExhausted,
+            },
+            Event::Release {
+                t: 3400,
+                req: 0,
+                latency: 3400,
+                queue_wait: 0,
+            },
+            Event::Release {
+                t: 3400,
+                req: 1,
+                latency: 2900,
+                queue_wait: 500,
+            },
+        ]
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json() {
+        let j = chrome_trace(&sample_events());
+        let text = j.render();
+        assert_valid_json(&text);
+        assert!(text.starts_with("{\"traceEvents\":["));
+        assert!(text.contains("\"displayTimeUnit\":\"ms\""));
+    }
+
+    #[test]
+    fn chrome_trace_has_tracks_slices_and_markers() {
+        let text = chrome_trace(&sample_events()).render();
+        // track naming metadata
+        assert!(text.contains(r#""process_name","ph":"M""#));
+        assert!(text.contains(r#"{"name":"req 0"}"#));
+        assert!(text.contains(r#"{"name":"req 1"}"#));
+        assert!(text.contains(r#"{"name":"processor"}"#));
+        // node exec slices with batch annotation on both track groups
+        assert!(text.contains(r#""name":"n1 b=2""#));
+        assert!(text.contains(r#""name":"n1","cat":"exec""#));
+        // queue-wait slice for the request that waited
+        assert!(text.contains(r#""name":"queue""#));
+        // decision markers
+        assert!(text.contains(r#""name":"merge""#));
+        assert!(text.contains(r#""name":"preempt""#));
+        assert!(text.contains(r#""name":"deny""#));
+        assert!(text.contains("slack_exhausted"));
+        // slack counter track
+        assert!(text.contains(r#""name":"predicted_slack_ms","ph":"C""#));
+    }
+
+    #[test]
+    fn chrome_trace_events_are_time_ordered() {
+        let text = chrome_trace(&sample_events()).render();
+        // every "ts": value in emission order must be non-decreasing
+        // (metadata events carry no ts and are emitted first)
+        let mut last = f64::NEG_INFINITY;
+        for chunk in text.split("\"ts\":").skip(1) {
+            let num: String = chunk
+                .chars()
+                .take_while(|c| c.is_ascii_digit() || *c == '.' || *c == '-')
+                .collect();
+            let ts: f64 = num.parse().unwrap();
+            assert!(ts >= last, "ts {ts} < previous {last}");
+            last = ts;
+        }
+        assert!(last > 0.0, "no timestamped events found");
+    }
+
+    #[test]
+    fn complete_events_have_nonnegative_durations() {
+        let text = chrome_trace(&sample_events()).render();
+        for chunk in text.split("\"dur\":").skip(1) {
+            let num: String = chunk
+                .chars()
+                .take_while(|c| c.is_ascii_digit() || *c == '.' || *c == '-')
+                .collect();
+            assert!(num.parse::<f64>().unwrap() >= 0.0);
+        }
+    }
+
+    #[test]
+    fn timelines_summarize_lifecycles() {
+        let tl = request_timelines(&sample_events());
+        assert_eq!(tl.len(), 2);
+        assert_eq!(tl[0].req, 0);
+        assert_eq!(tl[0].node_execs, 2); // n0 alone + merged n1
+        assert_eq!(tl[0].max_batch, 2);
+        assert_eq!(tl[0].preempted, 1);
+        assert_eq!(tl[0].latency, Some(3400));
+        assert_eq!(tl[1].req, 1);
+        assert_eq!(tl[1].queue_wait, Some(500));
+        assert_eq!(tl[1].node_execs, 2);
+    }
+}

@@ -1,0 +1,360 @@
+//! Named counters and fixed-bucket histograms.
+//!
+//! [`Registry`] is the generalized home for scheduler statistics: policies
+//! fold their [`crate::coordinator::PolicyStats`] into it (core counters
+//! plus any policy-specific named extras), the engine contributes
+//! queue-wait and batch-size [`Histogram`]s, and everything renders to one
+//! table or JSON object. Insertion order is preserved so reports are
+//! stable across runs.
+//!
+//! Histograms are fixed-bucket: bucket bounds are chosen at construction
+//! (`record` is O(log buckets), no allocation), and two histograms with
+//! identical bounds merge by adding counts — which is how per-run
+//! histograms aggregate across seeds in [`crate::metrics::Aggregate`].
+
+use crate::util::json::Json;
+use crate::Nanos;
+
+/// A fixed-bucket histogram over `u64` samples.
+///
+/// `bounds[i]` is the *inclusive upper* bound of bucket `i`; one overflow
+/// bucket catches everything above the last bound. Alongside the bucket
+/// counts the exact count/sum/min/max are kept, so mean is exact and only
+/// quantiles are bucket-resolution.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Histogram {
+    bounds: Vec<u64>,
+    counts: Vec<u64>,
+    total: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+}
+
+impl Histogram {
+    /// Histogram with the given ascending inclusive upper bounds.
+    pub fn new(bounds: Vec<u64>) -> Histogram {
+        assert!(!bounds.is_empty(), "histogram needs at least one bound");
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]),
+            "histogram bounds must be strictly ascending"
+        );
+        let n = bounds.len() + 1; // + overflow bucket
+        Histogram {
+            bounds,
+            counts: vec![0; n],
+            total: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+
+    /// Exponential bounds: `first, first*factor, …` (`n` bounds).
+    pub fn exponential(first: u64, factor: u64, n: usize) -> Histogram {
+        assert!(first > 0 && factor >= 2 && n >= 1);
+        let mut bounds = Vec::with_capacity(n);
+        let mut b = first;
+        for _ in 0..n {
+            bounds.push(b);
+            b = b.saturating_mul(factor);
+        }
+        Histogram::new(bounds)
+    }
+
+    /// Linear bounds: `step, 2*step, …, n*step`.
+    pub fn linear(step: u64, n: usize) -> Histogram {
+        assert!(step > 0 && n >= 1);
+        Histogram::new((1..=n as u64).map(|i| i * step).collect())
+    }
+
+    /// Canonical queue-wait histogram: 1 µs → ~17 s, ×2 buckets.
+    /// (Every engine run uses the same bounds so runs merge.)
+    pub fn queue_wait() -> Histogram {
+        Histogram::exponential(crate::US, 2, 24)
+    }
+
+    /// Canonical batch-size histogram: exact buckets 1..=64.
+    pub fn batch_size() -> Histogram {
+        Histogram::linear(1, 64)
+    }
+
+    /// Record one sample.
+    pub fn record(&mut self, v: u64) {
+        let idx = self.bounds.partition_point(|&b| b < v);
+        self.counts[idx] += 1;
+        self.total += 1;
+        self.sum += v as u128;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Exact mean of the recorded samples (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.total as f64
+        }
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.total == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Bucket-resolution quantile: the upper bound of the first bucket at
+    /// which the cumulative count reaches `q` (0.0..=1.0). Returns the
+    /// exact observed max for the overflow bucket.
+    pub fn quantile(&self, q: f64) -> u64 {
+        assert!((0.0..=1.0).contains(&q));
+        if self.total == 0 {
+            return 0;
+        }
+        let target = (q * self.total as f64).ceil().max(1.0) as u64;
+        let mut cum = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return if i < self.bounds.len() {
+                    self.bounds[i].min(self.max)
+                } else {
+                    self.max
+                };
+            }
+        }
+        self.max
+    }
+
+    /// Fold another histogram with identical bounds into this one.
+    pub fn merge(&mut self, other: &Histogram) {
+        assert_eq!(self.bounds, other.bounds, "histogram bounds mismatch");
+        for (c, o) in self.counts.iter_mut().zip(&other.counts) {
+            *c += o;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Non-empty buckets as `(inclusive upper bound, count)`; the overflow
+    /// bucket reports `u64::MAX` as its bound.
+    pub fn nonzero_buckets(&self) -> Vec<(u64, u64)> {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|&(_, &c)| c > 0)
+            .map(|(i, &c)| {
+                let bound = self.bounds.get(i).copied().unwrap_or(u64::MAX);
+                (bound, c)
+            })
+            .collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut buckets = Json::arr();
+        for (bound, count) in self.nonzero_buckets() {
+            buckets = buckets.push(
+                Json::obj()
+                    .set("le", if bound == u64::MAX { -1i64 } else { bound as i64 })
+                    .set("count", count),
+            );
+        }
+        Json::obj()
+            .set("count", self.total)
+            .set("mean", self.mean())
+            .set("min", self.min())
+            .set("max", self.max())
+            .set("buckets", buckets)
+    }
+}
+
+/// Milliseconds view of a nanosecond value (report formatting).
+pub fn ns_to_ms(ns: Nanos) -> f64 {
+    ns as f64 / crate::MS as f64
+}
+
+/// Insertion-ordered registry of named counters and histograms.
+#[derive(Debug, Clone, Default)]
+pub struct Registry {
+    counters: Vec<(String, u64)>,
+    histograms: Vec<(String, Histogram)>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Add `delta` to the named counter, creating it at 0 if absent.
+    pub fn add(&mut self, name: &str, delta: u64) {
+        match self.counters.iter_mut().find(|(n, _)| n == name) {
+            Some((_, v)) => *v += delta,
+            None => self.counters.push((name.to_string(), delta)),
+        }
+    }
+
+    /// Current value of a counter (0 if never touched).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|&(_, v)| v)
+            .unwrap_or(0)
+    }
+
+    /// Mutable access to the named histogram, creating it with `mk` on
+    /// first use.
+    pub fn histogram_mut(
+        &mut self,
+        name: &str,
+        mk: impl FnOnce() -> Histogram,
+    ) -> &mut Histogram {
+        if let Some(i) = self.histograms.iter().position(|(n, _)| n == name) {
+            return &mut self.histograms[i].1;
+        }
+        self.histograms.push((name.to_string(), mk()));
+        &mut self.histograms.last_mut().unwrap().1
+    }
+
+    /// Record one sample into the named histogram.
+    pub fn observe(&mut self, name: &str, v: u64, mk: impl FnOnce() -> Histogram) {
+        self.histogram_mut(name, mk).record(v);
+    }
+
+    /// The named histogram, if present.
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.histograms
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, h)| h)
+    }
+
+    /// Install (or merge into) a named histogram wholesale.
+    pub fn fold_histogram(&mut self, name: &str, h: &Histogram) {
+        match self.histograms.iter_mut().find(|(n, _)| n == name) {
+            Some((_, mine)) => mine.merge(h),
+            None => self.histograms.push((name.to_string(), h.clone())),
+        }
+    }
+
+    /// Counters in insertion order.
+    pub fn counters(&self) -> &[(String, u64)] {
+        &self.counters
+    }
+
+    /// Histograms in insertion order.
+    pub fn histograms(&self) -> &[(String, Histogram)] {
+        &self.histograms
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut counters = Json::obj();
+        for (n, v) in &self.counters {
+            counters = counters.set(n, *v);
+        }
+        let mut hists = Json::obj();
+        for (n, h) in &self.histograms {
+            hists = hists.set(n, h.to_json());
+        }
+        Json::obj().set("counters", counters).set("histograms", hists)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_and_overflow() {
+        let mut h = Histogram::new(vec![10, 100, 1000]);
+        for v in [1, 10, 11, 100, 5000] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.min(), 1);
+        assert_eq!(h.max(), 5000);
+        // buckets: ≤10 → {1,10}, ≤100 → {11,100}, ≤1000 → {}, overflow → {5000}
+        assert_eq!(
+            h.nonzero_buckets(),
+            vec![(10, 2), (100, 2), (u64::MAX, 1)]
+        );
+        assert!((h.mean() - (1.0 + 10.0 + 11.0 + 100.0 + 5000.0) / 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_quantiles_are_bucket_bounds() {
+        let mut h = Histogram::linear(1, 8);
+        for v in 1..=8u64 {
+            h.record(v);
+        }
+        assert_eq!(h.quantile(0.5), 4);
+        assert_eq!(h.quantile(1.0), 8);
+        assert_eq!(h.quantile(0.0), 1);
+    }
+
+    #[test]
+    fn histogram_merge_adds_counts() {
+        let mut a = Histogram::batch_size();
+        let mut b = Histogram::batch_size();
+        a.record(4);
+        b.record(4);
+        b.record(64);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert_eq!(a.max(), 64);
+        assert_eq!(a.nonzero_buckets(), vec![(4, 2), (64, 1)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "bounds mismatch")]
+    fn histogram_merge_rejects_different_bounds() {
+        let mut a = Histogram::linear(1, 4);
+        a.merge(&Histogram::linear(2, 4));
+    }
+
+    #[test]
+    fn registry_counters_accumulate_in_order() {
+        let mut r = Registry::new();
+        r.add("merges", 2);
+        r.add("preemptions", 1);
+        r.add("merges", 3);
+        assert_eq!(r.counter("merges"), 5);
+        assert_eq!(r.counter("preemptions"), 1);
+        assert_eq!(r.counter("absent"), 0);
+        let names: Vec<&str> = r.counters().iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["merges", "preemptions"]);
+    }
+
+    #[test]
+    fn registry_histograms_observe_and_fold() {
+        let mut r = Registry::new();
+        r.observe("batch_size", 3, Histogram::batch_size);
+        r.observe("batch_size", 3, Histogram::batch_size);
+        assert_eq!(r.histogram("batch_size").unwrap().count(), 2);
+        let mut other = Histogram::batch_size();
+        other.record(5);
+        r.fold_histogram("batch_size", &other);
+        assert_eq!(r.histogram("batch_size").unwrap().count(), 3);
+        // render shape
+        let s = r.to_json().render();
+        assert!(s.contains("\"counters\""));
+        assert!(s.contains("\"batch_size\""));
+    }
+}

@@ -90,14 +90,20 @@ pub fn geomean(xs: &[f64]) -> f64 {
 pub fn cdf_at(samples: &[f64], thresholds: &[f64]) -> Vec<f64> {
     let mut v: Vec<f64> = samples.to_vec();
     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    cdf_at_sorted(&v, thresholds)
+}
+
+/// [`cdf_at`] over an already-sorted slice — callers that evaluate the CDF
+/// repeatedly (e.g. [`crate::metrics::Aggregate`]) sort once and reuse.
+pub fn cdf_at_sorted(sorted: &[f64], thresholds: &[f64]) -> Vec<f64> {
     thresholds
         .iter()
         .map(|&t| {
-            let idx = v.partition_point(|&x| x <= t);
-            if v.is_empty() {
+            let idx = sorted.partition_point(|&x| x <= t);
+            if sorted.is_empty() {
                 0.0
             } else {
-                idx as f64 / v.len() as f64
+                idx as f64 / sorted.len() as f64
             }
         })
         .collect()

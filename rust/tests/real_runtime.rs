@@ -1,8 +1,11 @@
 //! Integration tests over the real PJRT execution path.
 //!
-//! These require `make artifacts` to have produced `artifacts/minifmr/`;
-//! they are skipped (with a notice) when the artifacts are absent so that
-//! `cargo test` works in a fresh checkout before the python build step.
+//! These require the `real` cargo feature (the XLA/PJRT dependency) and
+//! `make artifacts` to have produced `artifacts/minifmr/`; they are
+//! skipped (with a notice) when the artifacts are absent so that
+//! `cargo test --features real` works in a fresh checkout before the
+//! python build step.
+#![cfg(feature = "real")]
 
 use std::path::PathBuf;
 

@@ -16,11 +16,18 @@ run() {
 }
 
 run cargo build --release
+# tests build with debug assertions on: this also exercises the
+# shard-merge invariants (no lost/duplicated request ids, histogram
+# count conservation) in sim::shard.
 run cargo test -q
 
 if [[ "${1:-}" != "--fast" ]]; then
     run cargo fmt --check
     run cargo clippy -- -D warnings
+    # smoke: sharded simulation end-to-end through the bench front-end
+    # (tiny trace; the JSON path carries the merged histograms)
+    run env LB_BENCH_RUNS=2 LB_BENCH_SECS=0.2 \
+        cargo bench --bench perf_shard -- --shards 2 --json
 fi
 
 echo "ci: OK"

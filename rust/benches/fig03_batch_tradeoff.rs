@@ -5,14 +5,21 @@
 //! Paper shape to match: throughput rises steeply with batch size and
 //! levels out beyond ~16; Latency(all) grows with batch while
 //! Latency(avg) = Latency(all)/N falls and then flattens.
+//!
+//! `--json` prints one point per batch size (cost-model lookup only — no
+//! simulation runs here, so no histograms).
 
-use lazybatching::exp::{make_table, DeviceKind};
+use lazybatching::exp::{make_table, DeviceKind, JsonReport};
 use lazybatching::model::Workload;
+use lazybatching::util::json::Json;
 use lazybatching::util::table::{f3, Table};
 use lazybatching::MS;
 
 fn main() {
-    println!("Fig 3 — batching throughput/latency tradeoff (pre-formed batches, ResNet)");
+    let mut report = JsonReport::from_args("fig03_batch_tradeoff");
+    if !report.enabled() {
+        println!("Fig 3 — batching throughput/latency tradeoff (pre-formed batches, ResNet)");
+    }
     let table = make_table(Workload::ResNet, DeviceKind::Npu, 64);
     let mut t = Table::new(vec![
         "batch",
@@ -27,14 +34,28 @@ fn main() {
         let all_ms = all_ns / MS as f64;
         let avg_ms = all_ms / b as f64;
         let tput = b as f64 / (all_ns / 1e9);
+        let speedup = tput / (1.0 / (t1 / 1e9));
         t.row(vec![
             format!("{b}"),
             f3(all_ms),
             f3(avg_ms),
             f3(tput),
-            f3(tput / (1.0 / (t1 / 1e9))),
+            f3(speedup),
         ]);
+        report.push(
+            Json::obj()
+                .set("workload", "resnet")
+                .set("batch", b)
+                .set("latency_all_ms", all_ms)
+                .set("latency_avg_ms", avg_ms)
+                .set("throughput", tput)
+                .set("tput_vs_b1", speedup),
+        );
     }
-    t.print();
-    println!("\npaper: throughput saturates beyond batch ~16 (\"practically meaningless\n       for the ML inference server to batch inputs beyond 16 for ResNet\")");
+    if report.enabled() {
+        report.print();
+    } else {
+        t.print();
+        println!("\npaper: throughput saturates beyond batch ~16 (\"practically meaningless\n       for the ML inference server to batch inputs beyond 16 for ResNet\")");
+    }
 }

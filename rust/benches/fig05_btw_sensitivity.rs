@@ -5,17 +5,26 @@
 //! Paper shape: under low traffic a larger window only adds latency (no
 //! batch-size gain); under heavy traffic larger windows form much larger
 //! batches and start paying off.
+//!
+//! `--json` prints one point per (traffic band, BTW) with the full
+//! aggregate statistics, including the queue-wait and batch-size
+//! histograms. All (band, BTW) points are measured in parallel.
 
-use lazybatching::exp::{self, ExpConfig, PolicyCfg};
+use lazybatching::exp::{self, ExpConfig, JsonReport, PolicyCfg};
 use lazybatching::model::Workload;
+use lazybatching::util::par;
 use lazybatching::util::table::{f3, Table};
 
 fn main() {
-    println!("Fig 5 — GraphB batching time-window sensitivity (ResNet)");
+    let mut report = JsonReport::from_args("fig05_btw_sensitivity");
+    if !report.enabled() {
+        println!("Fig 5 — GraphB batching time-window sensitivity (ResNet)");
+    }
     let runs = exp::bench_runs();
     let mut t = Table::new(vec![
         "traffic", "rate", "BTW(ms)", "max batch", "avg lat/input (ms)",
     ]);
+    let mut points = Vec::new();
     for (band, rate) in [("low", 16.0), ("medium", 250.0), ("high", 2000.0)] {
         for btw in [5u64, 35, 65, 99] {
             let cfg = ExpConfig {
@@ -26,19 +35,35 @@ fn main() {
                 runs,
                 ..ExpConfig::default()
             };
-            let agg = exp::run(&cfg);
-            let max_batch = max_formed_batch(&cfg);
-            t.row(vec![
-                band.to_string(),
-                format!("{rate}"),
-                format!("{btw}"),
-                format!("{max_batch}"),
-                f3(agg.mean_latency_ms()),
-            ]);
+            points.push((band, rate, btw, cfg));
         }
     }
-    t.print();
-    println!("\npaper: low traffic — larger BTW no batch-size gain, only latency harm;\n       high traffic — large BTW forms large batches and recovers latency");
+    let results = par::par_map(points.clone(), |(_, _, _, cfg)| {
+        (exp::run(&cfg), max_formed_batch(&cfg))
+    });
+    for ((band, rate, btw, cfg), (agg, max_batch)) in points.iter().zip(&results) {
+        t.row(vec![
+            band.to_string(),
+            format!("{rate}"),
+            format!("{btw}"),
+            format!("{max_batch}"),
+            f3(agg.mean_latency_ms()),
+        ]);
+        report.push(
+            agg.to_json(cfg.sla)
+                .set("workload", "resnet")
+                .set("traffic", *band)
+                .set("rate", *rate)
+                .set("btw_ms", *btw)
+                .set("max_batch_formed", *max_batch),
+        );
+    }
+    if report.enabled() {
+        report.print();
+    } else {
+        t.print();
+        println!("\npaper: low traffic — larger BTW no batch-size gain, only latency harm;\n       high traffic — large BTW forms large batches and recovers latency");
+    }
 }
 
 /// Replay one trace through GraphB and track the largest formed batch.

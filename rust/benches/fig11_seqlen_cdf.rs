@@ -2,13 +2,21 @@
 //! WMT-2019 characterization, per language pair.
 //!
 //! Paper shape: ~70% of English sentences under 20 words, ~90% under 30.
+//!
+//! `--json` prints one point per language pair with the sampled length
+//! CDF (distribution sampling only — no simulation runs, no histograms).
 
+use lazybatching::exp::JsonReport;
 use lazybatching::traffic::{LangPair, SeqLenDist};
+use lazybatching::util::json::Json;
 use lazybatching::util::prng::Prng;
 use lazybatching::util::table::{f3, Table};
 
 fn main() {
-    println!("Fig 11 — WMT-2019 sentence-length characterization (30k samples/pair)");
+    let mut report = JsonReport::from_args("fig11_seqlen_cdf");
+    if !report.enabled() {
+        println!("Fig 11 — WMT-2019 sentence-length characterization (30k samples/pair)");
+    }
     let buckets = [10usize, 20, 30, 40, 50, 80];
     let mut t = Table::new(vec![
         "pair", "<10", "<20", "<30", "<40", "<50", "<=80",
@@ -19,16 +27,31 @@ fn main() {
         let n = 30_000;
         let samples: Vec<usize> = (0..n).map(|_| d.sample_input(&mut rng)).collect();
         let mut cells = vec![pair.name().to_string()];
+        let mut cdf = Vec::new();
         for &b in &buckets {
             let frac = samples.iter().filter(|&&l| l <= b).count() as f64 / n as f64;
             cells.push(f3(frac));
+            cdf.push(frac);
         }
         t.row(cells);
+        report.push(
+            Json::obj()
+                .set("pair", pair.name())
+                .set(
+                    "buckets",
+                    Json::Arr(buckets.iter().map(|&b| Json::from(b)).collect()),
+                )
+                .set("cdf", cdf),
+        );
     }
-    t.print();
-    println!(
-        "\ndec_timesteps at N=90% coverage (En→De): {}",
-        SeqLenDist::wmt2019(LangPair::EnDe, 80).dec_timesteps_for_coverage(0.90)
-    );
-    println!("paper: \"approximately 70% of the English sentences in WMT-2019 ... have\n       less than 20 words\"; 90% within 30 words -> dec_timesteps = 30-32");
+    if report.enabled() {
+        report.print();
+    } else {
+        t.print();
+        println!(
+            "\ndec_timesteps at N=90% coverage (En→De): {}",
+            SeqLenDist::wmt2019(LangPair::EnDe, 80).dec_timesteps_for_coverage(0.90)
+        );
+        println!("paper: \"approximately 70% of the English sentences in WMT-2019 ... have\n       less than 20 words\"; 90% within 30 words -> dec_timesteps = 30-32");
+    }
 }

@@ -3,18 +3,36 @@
 //!
 //! Paper shape: LazyB matches or beats the best throughput-optimized
 //! GraphB (1.1×/1.3×/1.2× for ResNet/GNMT/Transformer).
+//!
+//! `--json` prints one point per (workload, rate, policy) with the full
+//! aggregate statistics, including the queue-wait and batch-size
+//! histograms. Each rate's policy grid is measured in parallel.
 
-use lazybatching::exp::{self, ExpConfig, PolicyCfg};
+use lazybatching::exp::{self, ExpConfig, JsonReport, PolicyCfg};
 use lazybatching::model::Workload;
+use lazybatching::util::par;
 use lazybatching::util::stats::geomean;
 use lazybatching::util::table::{f3, ratio, Table};
 
+fn policy_grid() -> Vec<PolicyCfg> {
+    let mut policies = vec![PolicyCfg::Serial];
+    policies.extend(exp::GRAPHB_WINDOWS_MS.map(PolicyCfg::GraphB));
+    policies.push(PolicyCfg::Lazy);
+    policies.push(PolicyCfg::Oracle);
+    policies
+}
+
 fn main() {
-    println!("Fig 13 — throughput vs arrival rate");
+    let mut report = JsonReport::from_args("fig13_throughput");
+    if !report.enabled() {
+        println!("Fig 13 — throughput vs arrival rate");
+    }
     let runs = exp::bench_runs();
     let rates = [16.0, 128.0, 512.0, 1000.0, 2000.0];
     for w in Workload::MAIN {
-        println!("\n--- {} ---", w.name());
+        if !report.enabled() {
+            println!("\n--- {} ---", w.name());
+        }
         let mut t = Table::new(vec!["rate", "policy", "tput", "p25", "p75"]);
         let mut improvements = Vec::new();
         for &rate in &rates {
@@ -25,17 +43,18 @@ fn main() {
                 runs,
                 ..ExpConfig::default()
             };
-            let mut lazy_tput = 0.0;
-            let mut best_gb: f64 = 0.0;
-            let mut policies = vec![PolicyCfg::Serial];
-            policies.extend(exp::GRAPHB_WINDOWS_MS.map(PolicyCfg::GraphB));
-            policies.push(PolicyCfg::Lazy);
-            policies.push(PolicyCfg::Oracle);
-            for p in policies {
-                let agg = exp::run(&ExpConfig {
+            let configs: Vec<ExpConfig> = policy_grid()
+                .into_iter()
+                .map(|p| ExpConfig {
                     policy: p,
                     ..base.clone()
-                });
+                })
+                .collect();
+            let aggs = par::par_map(configs.clone(), |cfg| exp::run(&cfg));
+            let mut lazy_tput = 0.0;
+            let mut best_gb: f64 = 0.0;
+            for (cfg, agg) in configs.iter().zip(&aggs) {
+                let p = cfg.policy;
                 let (lo, hi) = agg.throughput_p25_p75();
                 if p == PolicyCfg::Lazy {
                     lazy_tput = agg.mean_throughput();
@@ -50,14 +69,26 @@ fn main() {
                     f3(lo),
                     f3(hi),
                 ]);
+                report.push(
+                    agg.to_json(cfg.sla)
+                        .set("workload", w.name())
+                        .set("rate", rate)
+                        .set("policy", p.name()),
+                );
             }
             improvements.push(lazy_tput / best_gb.max(1e-9));
         }
-        t.print();
-        println!(
-            "LazyB vs best GraphB throughput (geomean over rates): {}",
-            ratio(geomean(&improvements))
-        );
+        if !report.enabled() {
+            t.print();
+            println!(
+                "LazyB vs best GraphB throughput (geomean over rates): {}",
+                ratio(geomean(&improvements))
+            );
+        }
     }
-    println!("\npaper: 1.1x / 1.3x / 1.2x for resnet / gnmt / transformer");
+    if report.enabled() {
+        report.print();
+    } else {
+        println!("\npaper: 1.1x / 1.3x / 1.2x for resnet / gnmt / transformer");
+    }
 }

@@ -3,41 +3,75 @@
 //!
 //! Paper shape: LazyB's p99 far below GraphB's (e.g. 54 vs 123 ms for
 //! Transformer).
+//!
+//! `--json` prints one point per (workload, policy) with the latency CDF
+//! and the full aggregate statistics, including the queue-wait and
+//! batch-size histograms. The three workloads are measured in parallel.
 
-use lazybatching::exp::{self, best_graphb, ExpConfig, PolicyCfg};
+use lazybatching::exp::{self, best_graphb, ExpConfig, JsonReport, PolicyCfg};
 use lazybatching::model::Workload;
+use lazybatching::util::par;
 use lazybatching::util::table::{f3, Table};
 
 fn main() {
-    println!("Fig 14 — latency CDF @ 1K req/s (LazyB vs best GraphB)");
+    let mut report = JsonReport::from_args("fig14_tail_cdf");
+    if !report.enabled() {
+        println!("Fig 14 — latency CDF @ 1K req/s (LazyB vs best GraphB)");
+    }
     let runs = exp::bench_runs();
     let thresholds: Vec<f64> = (0..=15).map(|i| i as f64 * 10.0).collect();
-    for w in Workload::MAIN {
-        let base = ExpConfig {
+    let bases: Vec<ExpConfig> = Workload::MAIN
+        .into_iter()
+        .map(|w| ExpConfig {
             workload: w,
             rate: 1000.0,
             duration: exp::bench_duration(),
             runs,
             ..ExpConfig::default()
-        };
+        })
+        .collect();
+    let results = par::par_map(bases, |base| {
         let lazy = exp::run(&ExpConfig {
             policy: PolicyCfg::Lazy,
             ..base.clone()
         });
         let (bw, gb) = best_graphb(&base);
-        println!("\n--- {} (best GraphB window: {bw} ms) ---", w.name());
+        (base, lazy, bw, gb)
+    });
+    for (base, lazy, bw, gb) in &results {
+        let w = base.workload;
         let lazy_cdf = lazy.cdf(&thresholds);
         let gb_cdf = gb.cdf(&thresholds);
-        let mut t = Table::new(vec!["lat<=ms", "LazyB CDF", "GraphB CDF"]);
-        for (i, &th) in thresholds.iter().enumerate() {
-            t.row(vec![format!("{th}"), f3(lazy_cdf[i]), f3(gb_cdf[i])]);
+        if !report.enabled() {
+            println!("\n--- {} (best GraphB window: {bw} ms) ---", w.name());
+            let mut t = Table::new(vec!["lat<=ms", "LazyB CDF", "GraphB CDF"]);
+            for (i, &th) in thresholds.iter().enumerate() {
+                t.row(vec![format!("{th}"), f3(lazy_cdf[i]), f3(gb_cdf[i])]);
+            }
+            t.print();
+            println!(
+                "p99: LazyB {} ms vs GraphB({bw}) {} ms",
+                f3(lazy.p99_ms()),
+                f3(gb.p99_ms())
+            );
         }
-        t.print();
-        println!(
-            "p99: LazyB {} ms vs GraphB({bw}) {} ms",
-            f3(lazy.p99_ms()),
-            f3(gb.p99_ms())
-        );
+        for (name, agg, cdf) in [
+            ("LazyB".to_string(), lazy, &lazy_cdf),
+            (format!("GraphB({bw})"), gb, &gb_cdf),
+        ] {
+            report.push(
+                agg.to_json(base.sla)
+                    .set("workload", w.name())
+                    .set("rate", base.rate)
+                    .set("policy", name)
+                    .set("cdf_thresholds_ms", thresholds.clone())
+                    .set("cdf", cdf.clone()),
+            );
+        }
     }
-    println!("\npaper: LazyB p99 consistently much smaller (54 vs 123 ms for transformer)");
+    if report.enabled() {
+        report.print();
+    } else {
+        println!("\npaper: LazyB p99 consistently much smaller (54 vs 123 ms for transformer)");
+    }
 }

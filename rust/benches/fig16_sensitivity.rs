@@ -5,15 +5,25 @@
 //!
 //! Paper shape: 1.5× / 1.3× / 2.9× average improvement in latency /
 //! throughput / SLA satisfaction over the best GraphB.
+//!
+//! `--json` prints the (a)/(b) points with full aggregate statistics —
+//! including the queue-wait and batch-size histograms — plus one summary
+//! point per (workload, policy) for part (c). Sweep points are measured in
+//! parallel.
 
-use lazybatching::exp::{self, best_graphb, ExpConfig, PolicyCfg};
+use lazybatching::exp::{self, best_graphb, ExpConfig, JsonReport, PolicyCfg};
 use lazybatching::model::Workload;
+use lazybatching::util::json::Json;
+use lazybatching::util::par;
 use lazybatching::util::stats::{geomean, mean};
 use lazybatching::util::table::{f3, ratio, Table};
 use lazybatching::MS;
 
 fn main() {
-    println!("Fig 16 — sensitivity workloads (VN, MN, LAS, BERT)");
+    let mut report = JsonReport::from_args("fig16_sensitivity");
+    if !report.enabled() {
+        println!("Fig 16 — sensitivity workloads (VN, MN, LAS, BERT)");
+    }
     let runs = exp::bench_runs();
     let mut lat_ratios = Vec::new();
     let mut tput_ratios = Vec::new();
@@ -26,64 +36,88 @@ fn main() {
         "LazyB tput",
         "bestGB tput",
     ]);
+
+    // (a) + (b): latency/throughput at low and high load, in parallel
+    let mut pairs = Vec::new();
     for w in Workload::SENSITIVITY {
         for rate in [16.0, 1000.0] {
-            let base = ExpConfig {
+            pairs.push((w, rate));
+        }
+    }
+    let part_ab = par::par_map(pairs.clone(), |(w, rate)| {
+        let base = ExpConfig {
+            workload: w,
+            rate,
+            duration: exp::bench_duration(),
+            runs,
+            ..ExpConfig::default()
+        };
+        let lazy = exp::run(&ExpConfig {
+            policy: PolicyCfg::Lazy,
+            ..base.clone()
+        });
+        let (bw, gb) = best_graphb(&base);
+        (lazy, bw, gb)
+    });
+    for ((w, rate), (lazy, bw, gb)) in pairs.iter().zip(&part_ab) {
+        lat_ratios.push(gb.mean_latency_ms() / lazy.mean_latency_ms().max(1e-9));
+        tput_ratios.push(lazy.mean_throughput() / gb.mean_throughput().max(1e-9));
+        t.row(vec![
+            w.name().to_string(),
+            format!("{rate}"),
+            f3(lazy.mean_latency_ms()),
+            f3(gb.mean_latency_ms()),
+            f3(lazy.mean_throughput()),
+            f3(gb.mean_throughput()),
+        ]);
+        let sla = ExpConfig::default().sla;
+        for (name, agg) in [("LazyB".to_string(), lazy), (format!("GraphB({bw})"), gb)] {
+            report.push(
+                agg.to_json(sla)
+                    .set("workload", w.name())
+                    .set("rate", *rate)
+                    .set("policy", name),
+            );
+        }
+    }
+    if !report.enabled() {
+        t.print();
+        // (c) SLA violation, averaged over deadlines 20..100 ms @ 1000 req/s
+        println!("\n(c) average SLA violation rate over deadlines 20..100 ms @ 1000 req/s");
+    }
+
+    let deadlines = [20u64, 40, 60, 80, 100];
+    let mut t2 = Table::new(vec!["workload", "LazyB", "best GraphB", "Serial"]);
+    for w in Workload::SENSITIVITY {
+        // lazy, the four GraphB windows, serial — one violation rate per
+        // (policy, deadline), all in parallel; then averaged per policy
+        let mut policies = vec![PolicyCfg::Lazy];
+        policies.extend(exp::GRAPHB_WINDOWS_MS.map(PolicyCfg::GraphB));
+        policies.push(PolicyCfg::Serial);
+        let mut jobs = Vec::new();
+        for &p in &policies {
+            for &d in &deadlines {
+                jobs.push((p, d));
+            }
+        }
+        let viols = par::par_map(jobs, |(p, d)| {
+            exp::run(&ExpConfig {
                 workload: w,
-                rate,
+                policy: p,
+                rate: 1000.0,
+                sla: d * MS,
                 duration: exp::bench_duration(),
                 runs,
                 ..ExpConfig::default()
-            };
-            let lazy = exp::run(&ExpConfig {
-                policy: PolicyCfg::Lazy,
-                ..base.clone()
-            });
-            let (_bw, gb) = best_graphb(&base);
-            lat_ratios.push(gb.mean_latency_ms() / lazy.mean_latency_ms().max(1e-9));
-            tput_ratios.push(lazy.mean_throughput() / gb.mean_throughput().max(1e-9));
-            t.row(vec![
-                w.name().to_string(),
-                format!("{rate}"),
-                f3(lazy.mean_latency_ms()),
-                f3(gb.mean_latency_ms()),
-                f3(lazy.mean_throughput()),
-                f3(gb.mean_throughput()),
-            ]);
-        }
-    }
-    t.print();
-
-    // (c) SLA violation, averaged over deadlines 20..100 ms @ 1000 req/s
-    println!("\n(c) average SLA violation rate over deadlines 20..100 ms @ 1000 req/s");
-    let mut t2 = Table::new(vec!["workload", "LazyB", "best GraphB", "Serial"]);
-    for w in Workload::SENSITIVITY {
-        let deadlines = [20u64, 40, 60, 80, 100];
-        let avg_viol = |p: PolicyCfg| -> f64 {
-            mean(
-                &deadlines
-                    .iter()
-                    .map(|&d| {
-                        exp::run(&ExpConfig {
-                            workload: w,
-                            policy: p,
-                            rate: 1000.0,
-                            sla: d * MS,
-                            duration: exp::bench_duration(),
-                            runs,
-                            ..ExpConfig::default()
-                        })
-                        .violation_rate(d * MS)
-                    })
-                    .collect::<Vec<_>>(),
-            )
-        };
-        let lazy_v = avg_viol(PolicyCfg::Lazy);
-        let gb_v = exp::GRAPHB_WINDOWS_MS
-            .iter()
-            .map(|&wnd| avg_viol(PolicyCfg::GraphB(wnd)))
+            })
+            .violation_rate(d * MS)
+        });
+        let avg_for = |i: usize| mean(&viols[i * deadlines.len()..(i + 1) * deadlines.len()]);
+        let lazy_v = avg_for(0);
+        let gb_v = (1..=exp::GRAPHB_WINDOWS_MS.len())
+            .map(|i| avg_for(i))
             .fold(f64::INFINITY, f64::min);
-        let serial_v = avg_viol(PolicyCfg::Serial);
+        let serial_v = avg_for(1 + exp::GRAPHB_WINDOWS_MS.len());
         sla_ratios.push((gb_v.max(1e-3)) / (lazy_v.max(1e-3)));
         t2.row(vec![
             w.name().to_string(),
@@ -91,13 +125,26 @@ fn main() {
             f3(gb_v),
             f3(serial_v),
         ]);
+        for (name, v) in [("LazyB", lazy_v), ("best GraphB", gb_v), ("Serial", serial_v)] {
+            report.push(
+                Json::obj()
+                    .set("workload", w.name())
+                    .set("rate", 1000.0)
+                    .set("policy", name)
+                    .set("avg_violation_rate_20_100ms", v),
+            );
+        }
     }
-    t2.print();
-    println!(
-        "\naverage improvement: latency {}, throughput {}, SLA satisfaction {}",
-        ratio(geomean(&lat_ratios)),
-        ratio(geomean(&tput_ratios)),
-        ratio(geomean(&sla_ratios)),
-    );
-    println!("paper: 1.5x latency, 1.3x throughput, 2.9x SLA satisfaction");
+    if report.enabled() {
+        report.print();
+    } else {
+        t2.print();
+        println!(
+            "\naverage improvement: latency {}, throughput {}, SLA satisfaction {}",
+            ratio(geomean(&lat_ratios)),
+            ratio(geomean(&tput_ratios)),
+            ratio(geomean(&sla_ratios)),
+        );
+        println!("paper: 1.5x latency, 1.3x throughput, 2.9x SLA satisfaction");
+    }
 }

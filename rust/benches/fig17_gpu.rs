@@ -4,15 +4,23 @@
 //!
 //! Paper shape: 1.4–56× latency improvement over graph batching with
 //! competitive throughput; ~1.3× fewer SLA violations.
+//!
+//! `--json` prints one point per (rate, policy) with the full aggregate
+//! statistics, including the queue-wait and batch-size histograms. Each
+//! rate's policy grid is measured in parallel.
 
-use lazybatching::exp::{self, DeviceKind, ExpConfig, PolicyCfg};
+use lazybatching::exp::{self, DeviceKind, ExpConfig, JsonReport, PolicyCfg};
 use lazybatching::model::Workload;
+use lazybatching::util::par;
 use lazybatching::util::stats::geomean;
 use lazybatching::util::table::{f3, ratio, Table};
 use lazybatching::MS;
 
 fn main() {
-    println!("Fig 17 — GPU-based inference system (Transformer)");
+    let mut report = JsonReport::from_args("fig17_gpu");
+    if !report.enabled() {
+        println!("Fig 17 — GPU-based inference system (Transformer)");
+    }
     let runs = exp::bench_runs();
     let rates = [16.0, 128.0, 512.0, 1000.0];
     let mut t = Table::new(vec!["rate", "policy", "lat_ms", "tput", "viol@100ms"]);
@@ -26,16 +34,21 @@ fn main() {
             device: DeviceKind::Gpu,
             ..ExpConfig::default()
         };
-        let mut lazy_lat = 0.0;
-        let mut best_gb = f64::INFINITY;
         let mut policies = vec![PolicyCfg::Serial];
         policies.extend(exp::GRAPHB_WINDOWS_MS.map(PolicyCfg::GraphB));
         policies.push(PolicyCfg::Lazy);
-        for p in policies {
-            let agg = exp::run(&ExpConfig {
+        let configs: Vec<ExpConfig> = policies
+            .into_iter()
+            .map(|p| ExpConfig {
                 policy: p,
                 ..base.clone()
-            });
+            })
+            .collect();
+        let aggs = par::par_map(configs.clone(), |cfg| exp::run(&cfg));
+        let mut lazy_lat = 0.0;
+        let mut best_gb = f64::INFINITY;
+        for (cfg, agg) in configs.iter().zip(&aggs) {
+            let p = cfg.policy;
             if p == PolicyCfg::Lazy {
                 lazy_lat = agg.mean_latency_ms();
             }
@@ -49,15 +62,26 @@ fn main() {
                 f3(agg.mean_throughput()),
                 f3(agg.violation_rate(100 * MS)),
             ]);
+            report.push(
+                agg.to_json(cfg.sla)
+                    .set("workload", cfg.workload.name())
+                    .set("device", "gpu")
+                    .set("rate", rate)
+                    .set("policy", p.name()),
+            );
         }
         lat_ratios.push(best_gb / lazy_lat.max(1e-9));
     }
-    t.print();
-    println!(
-        "\nLazyB vs best GraphB latency on GPU (geomean): {} (range {}..{})",
-        ratio(geomean(&lat_ratios)),
-        f3(lat_ratios.iter().cloned().fold(f64::INFINITY, f64::min)),
-        f3(lat_ratios.iter().cloned().fold(0.0, f64::max)),
-    );
-    println!("paper: 1.4-56x latency improvement, competitive throughput");
+    if report.enabled() {
+        report.print();
+    } else {
+        t.print();
+        println!(
+            "\nLazyB vs best GraphB latency on GPU (geomean): {} (range {}..{})",
+            ratio(geomean(&lat_ratios)),
+            f3(lat_ratios.iter().cloned().fold(f64::INFINITY, f64::min)),
+            f3(lat_ratios.iter().cloned().fold(0.0, f64::max)),
+        );
+        println!("paper: 1.4-56x latency improvement, competitive throughput");
+    }
 }

@@ -4,21 +4,39 @@
 //!
 //! Paper: "the scheduling computational complexity is O(1) and is thus
 //! negligible".
+//!
+//! `--json` prints one point per measured operation, plus a `sim_run`
+//! point carrying the run's queue-wait and batch-size histograms. Timing
+//! loops stay strictly serial — wall-clock microbenches must not share
+//! cores.
 
 use lazybatching::coordinator::batch_table::{BatchTable, Entry};
 use lazybatching::coordinator::{Reqs, SlackMode, SlackPredictor};
-use lazybatching::exp::{self, ExpConfig, PolicyCfg};
+use lazybatching::exp::{self, ExpConfig, JsonReport, PolicyCfg};
 use lazybatching::model::Workload;
 use lazybatching::telemetry::{RecordingTracer, TracerRef};
 use lazybatching::traffic::RequestSpec;
+use lazybatching::util::json::Json;
 use lazybatching::util::table::{f3, Table};
 use lazybatching::MS;
 use std::sync::Arc;
 use std::time::Instant;
 
 fn main() {
-    println!("§VI-D — scheduler overhead & simulator hot path");
+    let mut report = JsonReport::from_args("perf_scheduler");
+    if !report.enabled() {
+        println!("§VI-D — scheduler overhead & simulator hot path");
+    }
     let mut t = Table::new(vec!["operation", "cost", "unit"]);
+    let op = |t: &mut Table, report: &mut JsonReport, name: String, cost: f64, unit: &str| {
+        t.row(vec![name.clone(), f3(cost), unit.to_string()]);
+        report.push(
+            Json::obj()
+                .set("operation", name)
+                .set("cost", cost)
+                .set("unit", unit),
+        );
+    };
 
     // BatchTable push+merge+retire microbench
     {
@@ -37,11 +55,7 @@ fn main() {
             }
         }
         let ns = start.elapsed().as_nanos() as f64 / iters as f64;
-        t.row(vec![
-            "BatchTable push+merge".to_string(),
-            f3(ns),
-            "ns/op".to_string(),
-        ]);
+        op(&mut t, &mut report, "BatchTable push+merge".to_string(), ns, "ns/op");
     }
 
     // slack prediction per admission decision
@@ -72,11 +86,13 @@ fn main() {
         }
         std::hint::black_box(acc);
         let ns = start.elapsed().as_nanos() as f64 / iters as f64;
-        t.row(vec![
+        op(
+            &mut t,
+            &mut report,
             "slack prediction (32 in-flight + 16 cand)".to_string(),
-            f3(ns),
-            "ns/decision".to_string(),
-        ]);
+            ns,
+            "ns/decision",
+        );
     }
 
     // end-to-end simulator throughput (node events per second), plus the
@@ -99,26 +115,43 @@ fn main() {
         let start = Instant::now();
         let r = exp::run_once(&cfg, table.clone(), 1);
         let wall = start.elapsed().as_secs_f64();
-        t.row(vec![
+        op(
+            &mut t,
+            &mut report,
             "sim node-events/s (transformer @1K)".to_string(),
-            f3(r.node_execs as f64 / wall),
-            "events/s".to_string(),
-        ]);
-        t.row(vec![
+            r.node_execs as f64 / wall,
+            "events/s",
+        );
+        op(
+            &mut t,
+            &mut report,
             "sim wall-clock per simulated second".to_string(),
-            f3(wall * 1e3),
-            "ms".to_string(),
-        ]);
+            wall * 1e3,
+            "ms",
+        );
+        report.push(
+            Json::obj()
+                .set("operation", "sim_run")
+                .set("workload", cfg.workload.name())
+                .set("rate", cfg.rate)
+                .set("node_execs", r.node_execs)
+                .set("requests", r.latencies.len())
+                .set("violation_rate", r.violation_rate(cfg.sla))
+                .set("queue_wait_hist", r.queue_wait_hist.to_json())
+                .set("batch_size_hist", r.batch_size_hist.to_json()),
+        );
 
         // second noop run = run-to-run noise floor for the comparison
         let start = Instant::now();
         std::hint::black_box(exp::run_once(&cfg, table.clone(), 1));
         let wall_noop2 = start.elapsed().as_secs_f64();
-        t.row(vec![
+        op(
+            &mut t,
+            &mut report,
             "noop-tracer run-to-run delta".to_string(),
-            f3((wall_noop2 / wall - 1.0) * 100.0),
-            "% (noise floor)".to_string(),
-        ]);
+            (wall_noop2 / wall - 1.0) * 100.0,
+            "% (noise floor)",
+        );
 
         let rec = RecordingTracer::new();
         let tracer: TracerRef = rec.clone();
@@ -126,11 +159,17 @@ fn main() {
         let rt = exp::run_once_traced(&cfg, table, 1, &tracer);
         let wall_rec = start.elapsed().as_secs_f64();
         assert_eq!(rt.node_execs, r.node_execs, "tracing changed the schedule");
-        t.row(vec![
+        op(
+            &mut t,
+            &mut report,
             format!("recording tracer ({} events)", rec.len()),
-            f3((wall_rec / wall - 1.0) * 100.0),
-            "% slowdown".to_string(),
-        ]);
+            (wall_rec / wall - 1.0) * 100.0,
+            "% slowdown",
+        );
     }
-    t.print();
+    if report.enabled() {
+        report.print();
+    } else {
+        t.print();
+    }
 }

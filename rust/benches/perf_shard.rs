@@ -1,0 +1,111 @@
+//! **Perf / sharding** — aggregate throughput scaling of the multi-NPU
+//! sharded simulation (1→8 shards behind the shared admission front-end)
+//! under a saturating Poisson trace, plus a determinism check that the
+//! threaded experiment runner produces byte-identical aggregates to the
+//! serial path.
+//!
+//! Expectation: near-linear scaling while the offered load saturates every
+//! shard — ≥ 3× aggregate throughput at 4 shards vs 1.
+//!
+//! Flags: `--shards 1,2,4,8` (comma list or single value),
+//! `--dispatch rr|jsq|p2c`, `--rate <req/s>`, `--json` (full aggregate
+//! statistics per point, including the queue-wait and batch-size
+//! histograms).
+
+use lazybatching::exp::{self, ExpConfig, JsonReport, PolicyCfg};
+use lazybatching::model::Workload;
+use lazybatching::sim::DispatchPolicy;
+use lazybatching::util::cli::Args;
+use lazybatching::util::table::{f3, Table};
+
+fn main() {
+    let args = Args::from_env();
+    let mut report = JsonReport::from_args("perf_shard");
+    let shard_list: Vec<usize> = match args.get("shards") {
+        None => vec![1, 2, 4, 8],
+        Some(s) => s
+            .split(',')
+            .map(|x| x.trim().parse().expect("--shards: expected integers"))
+            .collect(),
+    };
+    assert!(
+        shard_list.iter().all(|&s| s >= 1),
+        "--shards: every count must be >= 1"
+    );
+    let dispatch = DispatchPolicy::from_name(args.get_or("dispatch", "jsq"))
+        .expect("--dispatch: expected rr, jsq or p2c");
+    // saturating by default: far beyond what one ResNet shard can drain
+    let rate = args.get_f64("rate", 8000.0).expect("--rate");
+    let runs = exp::bench_runs();
+
+    if !report.enabled() {
+        println!(
+            "perf_shard — shard scaling @ {rate} req/s ({} dispatch, ResNet/LazyB)",
+            dispatch.name()
+        );
+    }
+
+    let base = ExpConfig {
+        workload: Workload::ResNet,
+        policy: PolicyCfg::Lazy,
+        rate,
+        duration: exp::bench_duration(),
+        runs,
+        dispatch,
+        ..ExpConfig::default()
+    };
+
+    // the threaded runner must be indistinguishable from the serial path
+    let small = ExpConfig {
+        runs: 3,
+        shards: shard_list[0],
+        ..base.clone()
+    };
+    let serial = exp::run_threaded(&small, 1);
+    let threaded = exp::run_threaded(&small, 4);
+    assert_eq!(
+        serial.to_json(small.sla).render(),
+        threaded.to_json(small.sla).render(),
+        "threaded experiment runner diverged from the serial path"
+    );
+    if !report.enabled() {
+        println!("parallel runner identity (serial vs 4 workers): ok");
+    }
+
+    let mut t = Table::new(vec!["shards", "tput (req/s)", "lat_ms", "p99_ms", "scaling"]);
+    let mut baseline = f64::NAN;
+    for &s in &shard_list {
+        let cfg = ExpConfig {
+            shards: s,
+            ..base.clone()
+        };
+        let agg = exp::run(&cfg);
+        let tput = agg.mean_throughput();
+        if baseline.is_nan() {
+            baseline = tput / s as f64; // per-shard baseline from the first point
+        }
+        let scaling = tput / baseline.max(1e-9);
+        t.row(vec![
+            format!("{s}"),
+            f3(tput),
+            f3(agg.mean_latency_ms()),
+            f3(agg.p99_ms()),
+            format!("{:.2}x", scaling),
+        ]);
+        report.push(
+            agg.to_json(cfg.sla)
+                .set("workload", cfg.workload.name())
+                .set("rate", rate)
+                .set("policy", cfg.policy.name())
+                .set("shards", s)
+                .set("dispatch", dispatch.name())
+                .set("scaling_vs_baseline", scaling),
+        );
+    }
+    if report.enabled() {
+        report.print();
+    } else {
+        t.print();
+        println!("\nexpected: >= 3x aggregate throughput at 4 shards vs 1 under saturation");
+    }
+}

@@ -8,67 +8,90 @@
 //!   eager merging, more preemption churn.
 //!
 //! This quantifies why the stricter Eq-2 veto is the right default.
+//!
+//! `--json` prints one point per (workload, rate, rule) with the full
+//! aggregate statistics, including the queue-wait and batch-size
+//! histograms. The grid — and each configuration's seeded runs — is
+//! measured in parallel.
 
 use std::sync::Arc;
 
 use lazybatching::coordinator::lazy::AdmissionRule;
 use lazybatching::coordinator::{LazyBatching, SlackMode};
-use lazybatching::exp::{self, DeviceKind};
+use lazybatching::exp::{self, DeviceKind, JsonReport};
 use lazybatching::metrics::Aggregate;
 use lazybatching::model::Workload;
 use lazybatching::sim::{RunResult, SimConfig, SimEngine};
 use lazybatching::traffic::Trace;
+use lazybatching::util::par;
 use lazybatching::util::table::{f3, Table};
 use lazybatching::MS;
 
 fn run_rule(w: Workload, rate: f64, rule: AdmissionRule, runs: usize) -> Aggregate {
     let table = exp::make_table(w, DeviceKind::Npu, 64);
     let cap = table.max_batch.min(table.saturation_batch(0.02));
-    let results: Vec<RunResult> = (0..runs)
-        .map(|i| {
-            let trace = Trace::generate(
-                &table.graph,
-                rate,
-                exp::bench_duration(),
-                0xAB1A + i as u64 * 7919,
-            );
-            let engine = SimEngine::single(table.clone(), SimConfig::default());
-            let mut p = LazyBatching::new(
-                Arc::clone(&table),
-                100 * MS,
-                32,
-                SlackMode::Conservative,
-                cap,
-            )
-            .with_admission(rule);
-            engine.run(&trace, &mut p)
-        })
-        .collect();
+    let results: Vec<RunResult> = par::par_map((0..runs).collect(), |i| {
+        let trace = Trace::generate(
+            &table.graph,
+            rate,
+            exp::bench_duration(),
+            0xAB1A + i as u64 * 7919,
+        );
+        let engine = SimEngine::single(table.clone(), SimConfig::default());
+        let mut p = LazyBatching::new(
+            Arc::clone(&table),
+            100 * MS,
+            32,
+            SlackMode::Conservative,
+            cap,
+        )
+        .with_admission(rule);
+        engine.run(&trace, &mut p)
+    });
     Aggregate::from_runs(&results)
 }
 
 fn main() {
-    println!("ablation — LazyB admission rule: Eq2 (paper) vs NoFlip (eager)");
+    let mut report = JsonReport::from_args("sens_admission");
+    if !report.enabled() {
+        println!("ablation — LazyB admission rule: Eq2 (paper) vs NoFlip (eager)");
+    }
     let runs = exp::bench_runs();
     let mut t = Table::new(vec![
         "workload", "rate", "rule", "lat_ms", "p99_ms", "tput", "viol@100ms",
     ]);
+    let mut jobs = Vec::new();
     for w in [Workload::Gnmt, Workload::Transformer, Workload::ResNet] {
         for rate in [250.0, 1000.0, 2000.0] {
             for (name, rule) in [("Eq2", AdmissionRule::Eq2), ("NoFlip", AdmissionRule::NoFlip)] {
-                let agg = run_rule(w, rate, rule, runs);
-                t.row(vec![
-                    w.name().to_string(),
-                    format!("{rate}"),
-                    name.to_string(),
-                    f3(agg.mean_latency_ms()),
-                    f3(agg.p99_ms()),
-                    f3(agg.mean_throughput()),
-                    f3(agg.violation_rate(100 * MS)),
-                ]);
+                jobs.push((w, rate, name, rule));
             }
         }
     }
-    t.print();
-    println!("\nexpected: comparable at low/medium load; NoFlip degrades at overload\n(preemption churn against doomed in-flight batches)");
+    let aggs = par::par_map(jobs.clone(), |(w, rate, _, rule)| {
+        run_rule(w, rate, rule, runs)
+    });
+    for ((w, rate, name, _), agg) in jobs.iter().zip(&aggs) {
+        t.row(vec![
+            w.name().to_string(),
+            format!("{rate}"),
+            name.to_string(),
+            f3(agg.mean_latency_ms()),
+            f3(agg.p99_ms()),
+            f3(agg.mean_throughput()),
+            f3(agg.violation_rate(100 * MS)),
+        ]);
+        report.push(
+            agg.to_json(100 * MS)
+                .set("workload", w.name())
+                .set("rate", *rate)
+                .set("rule", *name),
+        );
+    }
+    if report.enabled() {
+        report.print();
+    } else {
+        t.print();
+        println!("\nexpected: comparable at low/medium load; NoFlip degrades at overload\n(preemption churn against doomed in-flight batches)");
+    }
 }

@@ -3,14 +3,21 @@
 //!
 //! Paper: 2.4× latency and 1.8× throughput improvement with four
 //! co-located models.
+//!
+//! `--json` prints one point per (rate, policy) with the full aggregate
+//! statistics, including the queue-wait and batch-size histograms. The
+//! seeded runs inside `run_colocated` already fan out across threads.
 
-use lazybatching::exp::{self, run_colocated};
+use lazybatching::exp::{self, run_colocated, JsonReport};
 use lazybatching::model::Workload;
 use lazybatching::util::table::{f3, ratio, Table};
 use lazybatching::MS;
 
 fn main() {
-    println!("§VI-C — co-location: 4 models sharing one NPU");
+    let mut report = JsonReport::from_args("sens_colocation");
+    if !report.enabled() {
+        println!("§VI-C — co-location: 4 models sharing one NPU");
+    }
     let runs = exp::bench_runs();
     let models = [
         Workload::ResNet,
@@ -34,15 +41,25 @@ fn main() {
                 f3(agg.mean_throughput()),
                 f3(agg.violation_rate(sla)),
             ]);
+            report.push(
+                agg.to_json(sla)
+                    .set("models", "resnet+mobilenet+transformer+bert")
+                    .set("rate", rate)
+                    .set("policy", name),
+            );
         }
         lat_ratios.push(gb.mean_latency_ms() / lazy.mean_latency_ms().max(1e-9));
         tput_ratios.push(lazy.mean_throughput() / gb.mean_throughput().max(1e-9));
     }
-    t.print();
-    println!(
-        "\naverage improvement: latency {}, throughput {}",
-        ratio(lazybatching::util::stats::geomean(&lat_ratios)),
-        ratio(lazybatching::util::stats::geomean(&tput_ratios)),
-    );
-    println!("paper: 2.4x latency, 1.8x throughput with four co-located models");
+    if report.enabled() {
+        report.print();
+    } else {
+        t.print();
+        println!(
+            "\naverage improvement: latency {}, throughput {}",
+            ratio(lazybatching::util::stats::geomean(&lat_ratios)),
+            ratio(lazybatching::util::stats::geomean(&tput_ratios)),
+        );
+        println!("paper: 2.4x latency, 1.8x throughput with four co-located models");
+    }
 }

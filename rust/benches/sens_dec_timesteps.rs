@@ -5,15 +5,23 @@
 //! Paper: dec_timesteps=32 (N=90% coverage) ⇒ zero violations at 60 ms;
 //! dec_timesteps=10 (N=16%) ⇒ ~36% violations; robust as long as the
 //! bound is large enough to overprovision.
+//!
+//! `--json` prints one point per dec_timesteps value with the full
+//! aggregate statistics, including the queue-wait and batch-size
+//! histograms. The sweep is measured in parallel.
 
-use lazybatching::exp::{self, ExpConfig, PolicyCfg};
+use lazybatching::exp::{self, ExpConfig, JsonReport, PolicyCfg};
 use lazybatching::model::Workload;
 use lazybatching::traffic::{LangPair, SeqLenDist};
+use lazybatching::util::par;
 use lazybatching::util::table::{f3, Table};
 use lazybatching::MS;
 
 fn main() {
-    println!("§VI-C — LazyB sensitivity to dec_timesteps (SLA-critical: GNMT @ 1K req/s, 40 ms; paper studies Transformer @ 60 ms)");
+    let mut report = JsonReport::from_args("sens_dec_timesteps");
+    if !report.enabled() {
+        println!("§VI-C — LazyB sensitivity to dec_timesteps (SLA-critical: GNMT @ 1K req/s, 40 ms; paper studies Transformer @ 60 ms)");
+    }
     let runs = exp::bench_runs();
     let dist = SeqLenDist::wmt2019(LangPair::EnDe, 80);
     let mut t = Table::new(vec![
@@ -23,10 +31,9 @@ fn main() {
         "mean lat (ms)",
         "tput",
     ]);
-    for dec in [6usize, 10, 16, 24, 32, 48] {
-        // invert: what coverage does this bound correspond to?
-        let coverage = dist.cdf(dec as f64 / 0.95); // fertility-adjusted
-        let agg = exp::run(&ExpConfig {
+    let decs = vec![6usize, 10, 16, 24, 32, 48];
+    let aggs = par::par_map(decs.clone(), |dec| {
+        exp::run(&ExpConfig {
             workload: Workload::Gnmt,
             policy: PolicyCfg::Lazy,
             rate: 1000.0,
@@ -35,7 +42,11 @@ fn main() {
             duration: exp::bench_duration(),
             runs,
             ..ExpConfig::default()
-        });
+        })
+    });
+    for (&dec, agg) in decs.iter().zip(&aggs) {
+        // invert: what coverage does this bound correspond to?
+        let coverage = dist.cdf(dec as f64 / 0.95); // fertility-adjusted
         t.row(vec![
             format!("{dec}"),
             format!("{:.0}%", coverage * 100.0),
@@ -43,7 +54,18 @@ fn main() {
             f3(agg.mean_latency_ms()),
             f3(agg.mean_throughput()),
         ]);
+        report.push(
+            agg.to_json(40 * MS)
+                .set("workload", "gnmt")
+                .set("rate", 1000.0)
+                .set("dec_timesteps", dec)
+                .set("coverage", coverage),
+        );
     }
-    t.print();
-    println!("\npaper: zero violations at dec_timesteps=32; ~36% at 10 (Transformer @60ms).\nnote:  this implementation is additionally guarded by the stack-empty\n       bulk drain and the catch-up cost/benefit gate, so an optimistic\n       bound degrades violations far less than in the paper (see\n       EXPERIMENTS.md E12).");
+    if report.enabled() {
+        report.print();
+    } else {
+        t.print();
+        println!("\npaper: zero violations at dec_timesteps=32; ~36% at 10 (Transformer @60ms).\nnote:  this implementation is additionally guarded by the stack-empty\n       bulk drain and the catch-up cost/benefit gate, so an optimistic\n       bound degrades violations far less than in the paper (see\n       EXPERIMENTS.md E12).");
+    }
 }

@@ -3,20 +3,28 @@
 //!
 //! Paper: with max batch 16/32, LazyB achieves 12×/14× latency reduction
 //! and 1.3×/1.3× throughput improvement (vs 15×/1.5× at 64).
+//!
+//! `--json` prints one point per (max_batch, workload, rate, policy) with
+//! the full aggregate statistics, including the queue-wait and batch-size
+//! histograms. Each max_batch grid is measured in parallel.
 
-use lazybatching::exp::{self, ExpConfig, PolicyCfg};
+use lazybatching::exp::{self, ExpConfig, JsonReport, PolicyCfg};
 use lazybatching::model::Workload;
+use lazybatching::util::par;
 use lazybatching::util::stats::geomean;
-use lazybatching::util::table::{f3, ratio, Table};
+use lazybatching::util::table::{ratio, Table};
 
 fn main() {
-    println!("§VI-C — sensitivity to GraphB's model-allowed maximum batch size");
+    let mut report = JsonReport::from_args("sens_maxbatch");
+    if !report.enabled() {
+        println!("§VI-C — sensitivity to GraphB's model-allowed maximum batch size");
+    }
     let runs = exp::bench_runs();
     let rates = [16.0, 512.0, 1000.0];
     let mut t = Table::new(vec!["max_batch", "lat improvement", "tput improvement"]);
     for max_batch in [16usize, 32, 64] {
-        let mut lat_r = Vec::new();
-        let mut tput_r = Vec::new();
+        // one config per (workload, rate, policy), all measured in parallel
+        let mut configs = Vec::new();
         for w in Workload::MAIN {
             for &rate in &rates {
                 let base = ExpConfig {
@@ -27,23 +35,41 @@ fn main() {
                     max_batch,
                     ..ExpConfig::default()
                 };
-                let lazy = exp::run(&ExpConfig {
+                configs.push(ExpConfig {
                     policy: PolicyCfg::Lazy,
                     ..base.clone()
                 });
-                // best graph batching under this max batch
-                let mut best_lat = f64::INFINITY;
-                let mut best_tput: f64 = 0.0;
                 for wnd in exp::GRAPHB_WINDOWS_MS {
-                    let gb = exp::run(&ExpConfig {
+                    configs.push(ExpConfig {
                         policy: PolicyCfg::GraphB(wnd),
                         ..base.clone()
                     });
-                    best_lat = best_lat.min(gb.mean_latency_ms());
-                    best_tput = best_tput.max(gb.mean_throughput());
                 }
-                lat_r.push(best_lat / lazy.mean_latency_ms().max(1e-9));
-                tput_r.push(lazy.mean_throughput() / best_tput.max(1e-9));
+            }
+        }
+        let aggs = par::par_map(configs.clone(), |cfg| exp::run(&cfg));
+        let mut lat_r = Vec::new();
+        let mut tput_r = Vec::new();
+        // the grid is chunks of (lazy, GraphB×4) per (workload, rate)
+        let chunk = 1 + exp::GRAPHB_WINDOWS_MS.len();
+        for (cfgs, point) in configs.chunks(chunk).zip(aggs.chunks(chunk)) {
+            let lazy = &point[0];
+            let mut best_lat = f64::INFINITY;
+            let mut best_tput: f64 = 0.0;
+            for gb in &point[1..] {
+                best_lat = best_lat.min(gb.mean_latency_ms());
+                best_tput = best_tput.max(gb.mean_throughput());
+            }
+            lat_r.push(best_lat / lazy.mean_latency_ms().max(1e-9));
+            tput_r.push(lazy.mean_throughput() / best_tput.max(1e-9));
+            for (cfg, agg) in cfgs.iter().zip(point) {
+                report.push(
+                    agg.to_json(cfg.sla)
+                        .set("workload", cfg.workload.name())
+                        .set("rate", cfg.rate)
+                        .set("max_batch", max_batch)
+                        .set("policy", cfg.policy.name()),
+                );
             }
         }
         t.row(vec![
@@ -51,8 +77,11 @@ fn main() {
             ratio(geomean(&lat_r)),
             ratio(geomean(&tput_r)),
         ]);
-        let _ = f3(0.0);
     }
-    t.print();
-    println!("\npaper: 12x/14x latency and 1.3x/1.3x throughput at max batch 16/32");
+    if report.enabled() {
+        report.print();
+    } else {
+        t.print();
+        println!("\npaper: 12x/14x latency and 1.3x/1.3x throughput at max batch 16/32");
+    }
 }

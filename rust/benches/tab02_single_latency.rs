@@ -2,14 +2,31 @@
 //! workloads on the Table-I NPU (calibration check for the cost model).
 //!
 //! Paper: ResNet 1.1 ms, GNMT 7.2 ms, Transformer 2.4 ms.
+//!
+//! `--json` prints one point per workload (cost-model lookup only — no
+//! simulation runs here, so no histograms).
 
-use lazybatching::exp::{make_table, DeviceKind};
+use lazybatching::exp::{make_table, DeviceKind, JsonReport};
 use lazybatching::model::{Workload, WMT_MEAN_IN, WMT_MEAN_OUT};
+use lazybatching::util::json::Json;
 use lazybatching::util::table::{f3, Table};
 use lazybatching::MS;
 
+fn single_batch_ms(w: Workload) -> f64 {
+    let table = make_table(w, DeviceKind::Npu, 64);
+    let (i, o) = if table.graph.is_dynamic() {
+        (WMT_MEAN_IN, WMT_MEAN_OUT)
+    } else {
+        (1, 1)
+    };
+    table.true_exec_time(i, o) as f64 / MS as f64
+}
+
 fn main() {
-    println!("Table II — single-batch latency (b=1, WMT mean sentence lengths)");
+    let mut report = JsonReport::from_args("tab02_single_latency");
+    if !report.enabled() {
+        println!("Table II — single-batch latency (b=1, WMT mean sentence lengths)");
+    }
     let paper = [
         (Workload::ResNet, 1.1),
         (Workload::Gnmt, 7.2),
@@ -23,13 +40,7 @@ fn main() {
         "delta",
     ]);
     for (w, paper_ms) in paper {
-        let table = make_table(w, DeviceKind::Npu, 64);
-        let (i, o) = if table.graph.is_dynamic() {
-            (WMT_MEAN_IN, WMT_MEAN_OUT)
-        } else {
-            (1, 1)
-        };
-        let ms = table.true_exec_time(i, o) as f64 / MS as f64;
+        let ms = single_batch_ms(w);
         let kind = match w {
             Workload::ResNet => "CNN",
             Workload::Gnmt => "RNN",
@@ -42,23 +53,31 @@ fn main() {
             f3(paper_ms),
             format!("{:+.0}%", (ms / paper_ms - 1.0) * 100.0),
         ]);
+        report.push(
+            Json::obj()
+                .set("workload", w.name())
+                .set("algorithm", kind)
+                .set("measured_ms", ms)
+                .set("paper_ms", paper_ms),
+        );
     }
-    t.print();
 
     // extended: the sensitivity zoo too (no paper reference values)
-    println!("\nsensitivity workloads (no paper reference):");
     let mut t2 = Table::new(vec!["workload", "measured (ms)"]);
     for w in Workload::SENSITIVITY {
-        let table = make_table(w, DeviceKind::Npu, 64);
-        let (i, o) = if table.graph.is_dynamic() {
-            (WMT_MEAN_IN, WMT_MEAN_OUT)
-        } else {
-            (1, 1)
-        };
-        t2.row(vec![
-            w.name().to_string(),
-            f3(table.true_exec_time(i, o) as f64 / MS as f64),
-        ]);
+        let ms = single_batch_ms(w);
+        t2.row(vec![w.name().to_string(), f3(ms)]);
+        report.push(
+            Json::obj()
+                .set("workload", w.name())
+                .set("measured_ms", ms),
+        );
     }
-    t2.print();
+    if report.enabled() {
+        report.print();
+    } else {
+        t.print();
+        println!("\nsensitivity workloads (no paper reference):");
+        t2.print();
+    }
 }

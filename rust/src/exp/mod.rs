@@ -1,6 +1,15 @@
 //! Experiment runner: one place that wires workloads, devices, traffic and
 //! policies together so every bench, example and CLI subcommand measures
 //! the same way (20 seeded runs, identical traces across policies).
+//!
+//! The seeded runs of [`run`] fan out across OS threads
+//! ([`crate::util::par`]); results are collected in seed order, so
+//! aggregates — and every byte of JSON downstream — are identical to the
+//! serial path. Set `LB_THREADS=1` to force serial execution.
+
+pub mod report;
+
+pub use report::JsonReport;
 
 use std::sync::Arc;
 
@@ -12,8 +21,10 @@ use crate::model::{LatencyTable, Workload};
 use crate::npu::gpu::GpuModel;
 use crate::npu::systolic::SystolicModel;
 use crate::npu::CostModel;
-use crate::sim::{RunResult, SimConfig, SimEngine};
+use crate::sim::{DispatchPolicy, RunResult, ShardRun, ShardedEngine, SimConfig, SimEngine};
+use crate::telemetry::TracerRef;
 use crate::traffic::{LangPair, Trace};
+use crate::util::par;
 use crate::{Nanos, MS, SEC};
 
 /// Scheduling policy selector.
@@ -65,6 +76,12 @@ pub struct ExpConfig {
     pub max_batch: usize,
     pub device: DeviceKind,
     pub lang: LangPair,
+    /// NPUs behind the shared admission front-end. `1` (the default) runs
+    /// the plain single-engine path.
+    pub shards: usize,
+    /// How arrivals are routed across shards when `shards > 1`. P2C's
+    /// internal seed is re-salted per run seed.
+    pub dispatch: DispatchPolicy,
 }
 
 impl Default for ExpConfig {
@@ -81,6 +98,8 @@ impl Default for ExpConfig {
             max_batch: 64,
             device: DeviceKind::Npu,
             lang: LangPair::EnDe,
+            shards: 1,
+            dispatch: DispatchPolicy::JoinShortestQueue,
         }
     }
 }
@@ -155,43 +174,86 @@ pub fn make_policy(cfg: &ExpConfig, table: Arc<LatencyTable>) -> Box<dyn Batcher
     }
 }
 
-/// Run a single seeded simulation.
+/// Run a single seeded simulation. With `cfg.shards > 1` the run goes
+/// through the sharded front-end and the cross-shard merge is returned.
 pub fn run_once(cfg: &ExpConfig, table: Arc<LatencyTable>, seed: u64) -> RunResult {
     run_once_traced(cfg, table, seed, &crate::telemetry::noop())
 }
 
 /// [`run_once`] with lifecycle events emitted to `tracer` (the CLI's
-/// `trace` subcommand and the quickstart example run through here).
+/// `trace` subcommand and the quickstart example run through here). With
+/// `cfg.shards > 1`, every shard writes to the same `tracer` (one merged
+/// stream); use [`run_sharded_traced`] for per-shard streams.
 pub fn run_once_traced(
     cfg: &ExpConfig,
     table: Arc<LatencyTable>,
     seed: u64,
-    tracer: &crate::telemetry::TracerRef,
+    tracer: &TracerRef,
 ) -> RunResult {
-    let trace = Trace::generate_multi(
+    if cfg.shards > 1 {
+        let tracers: Vec<TracerRef> = (0..cfg.shards).map(|_| tracer.clone()).collect();
+        return run_sharded_traced(cfg, table, seed, &tracers).merged;
+    }
+    let trace = make_trace(cfg, &table, seed);
+    let engine = SimEngine::single(table.clone(), sim_config(cfg));
+    let mut policy = make_policy(cfg, table);
+    engine.run_traced(&trace, policy.as_mut(), tracer)
+}
+
+/// Sharded run with one tracer per shard (ready for
+/// [`crate::telemetry::perfetto::chrome_trace_sharded`]). The trace is the
+/// same one the single-engine path would see for this seed — only the
+/// routing differs — so shard counts are directly comparable.
+pub fn run_sharded_traced(
+    cfg: &ExpConfig,
+    table: Arc<LatencyTable>,
+    seed: u64,
+    tracers: &[TracerRef],
+) -> ShardRun {
+    let trace = make_trace(cfg, &table, seed);
+    let engine = ShardedEngine::new(
+        vec![table.clone()],
+        sim_config(cfg),
+        cfg.shards.max(1),
+        cfg.dispatch.reseeded(seed),
+    );
+    engine.run_traced(&trace, |_| make_policy(cfg, table.clone()), tracers)
+}
+
+fn make_trace(cfg: &ExpConfig, table: &Arc<LatencyTable>, seed: u64) -> Trace {
+    Trace::generate_multi(
         &[table.graph.as_ref()],
         cfg.rate,
         cfg.duration,
         seed,
         cfg.lang,
-    );
-    let engine = SimEngine::single(
-        table.clone(),
-        SimConfig {
-            max_batch: cfg.max_batch,
-            ..SimConfig::default()
-        },
-    );
-    let mut policy = make_policy(cfg, table);
-    engine.run_traced(&trace, policy.as_mut(), tracer)
+    )
 }
 
-/// Run `cfg.runs` independent seeds and aggregate.
+fn sim_config(cfg: &ExpConfig) -> SimConfig {
+    SimConfig {
+        max_batch: cfg.max_batch,
+        ..SimConfig::default()
+    }
+}
+
+/// Run `cfg.runs` independent seeds (in parallel, see [`run_threaded`])
+/// and aggregate.
 pub fn run(cfg: &ExpConfig) -> Aggregate {
+    run_threaded(cfg, par::threads())
+}
+
+/// [`run`] on an explicit worker count. Results are collected in seed
+/// order, so the aggregate is identical for any `workers` — `workers <= 1`
+/// is the exact serial path (no threads spawned).
+pub fn run_threaded(cfg: &ExpConfig, workers: usize) -> Aggregate {
     let table = make_table(cfg.workload, cfg.device, cfg.max_batch);
-    let runs: Vec<RunResult> = (0..cfg.runs)
-        .map(|i| run_once(cfg, table.clone(), cfg.seed.wrapping_add(i as u64 * 7919)))
+    let seeds: Vec<u64> = (0..cfg.runs)
+        .map(|i| cfg.seed.wrapping_add(i as u64 * 7919))
         .collect();
+    let runs = par::par_map_threads(workers, seeds, |seed| {
+        run_once(cfg, table.clone(), seed)
+    });
     Aggregate::from_runs(&runs)
 }
 
@@ -210,30 +272,25 @@ pub fn run_colocated(
         .iter()
         .map(|&w| make_table(w, DeviceKind::Npu, 64))
         .collect();
-    let results: Vec<RunResult> = (0..runs)
-        .map(|i| {
-            let graphs: Vec<&crate::model::ModelGraph> =
-                tables.iter().map(|t| t.graph.as_ref()).collect();
-            let trace = Trace::generate_multi(
-                &graphs,
-                rate,
-                duration,
-                seed.wrapping_add(i as u64 * 104729),
-                LangPair::EnDe,
-            );
-            let engine = SimEngine::new(tables.clone(), SimConfig::default());
-            let mut policy: Box<dyn Batcher> = if lazy {
-                Box::new(ColocLazy::new(tables.clone(), sla, 64))
-            } else {
-                Box::new(ColocGraphB::new(
-                    tables.iter().map(|t| t.graph.clone()).collect(),
-                    btw_ms * MS,
-                    64,
-                ))
-            };
-            engine.run(&trace, policy.as_mut())
-        })
+    let run_seeds: Vec<u64> = (0..runs)
+        .map(|i| seed.wrapping_add(i as u64 * 104729))
         .collect();
+    let results: Vec<RunResult> = par::par_map(run_seeds, |run_seed| {
+        let graphs: Vec<&crate::model::ModelGraph> =
+            tables.iter().map(|t| t.graph.as_ref()).collect();
+        let trace = Trace::generate_multi(&graphs, rate, duration, run_seed, LangPair::EnDe);
+        let engine = SimEngine::new(tables.clone(), SimConfig::default());
+        let mut policy: Box<dyn Batcher> = if lazy {
+            Box::new(ColocLazy::new(tables.clone(), sla, 64))
+        } else {
+            Box::new(ColocGraphB::new(
+                tables.iter().map(|t| t.graph.clone()).collect(),
+                btw_ms * MS,
+                64,
+            ))
+        };
+        engine.run(&trace, policy.as_mut())
+    });
     Aggregate::from_runs(&results)
 }
 
@@ -292,6 +349,69 @@ mod tests {
     fn policy_names() {
         assert_eq!(PolicyCfg::GraphB(35).name(), "GraphB(35)");
         assert_eq!(PolicyCfg::Lazy.name(), "LazyB");
+    }
+
+    #[test]
+    fn parallel_runner_is_byte_identical_to_serial() {
+        // acceptance: the threaded fan-out must not change a single byte
+        // of the rendered aggregate for a fixed seed
+        let cfg = ExpConfig {
+            workload: Workload::ResNet,
+            policy: PolicyCfg::Lazy,
+            rate: 200.0,
+            duration: SEC,
+            runs: 4,
+            ..ExpConfig::default()
+        };
+        let serial = run_threaded(&cfg, 1);
+        let threaded = run_threaded(&cfg, 4);
+        assert_eq!(serial.pooled_ns, threaded.pooled_ns);
+        assert_eq!(serial.run_mean_latency_ms, threaded.run_mean_latency_ms);
+        assert_eq!(
+            serial.to_json(cfg.sla).render(),
+            threaded.to_json(cfg.sla).render()
+        );
+    }
+
+    #[test]
+    fn sharded_config_scales_throughput() {
+        let base = ExpConfig {
+            workload: Workload::ResNet,
+            policy: PolicyCfg::Lazy,
+            rate: 4000.0,
+            duration: SEC / 2,
+            runs: 2,
+            ..ExpConfig::default()
+        };
+        let one = run(&base);
+        let four = run(&ExpConfig {
+            shards: 4,
+            ..base.clone()
+        });
+        assert!(
+            four.mean_throughput() > one.mean_throughput() * 2.5,
+            "4-shard {:.0} vs 1-shard {:.0} req/s",
+            four.mean_throughput(),
+            one.mean_throughput()
+        );
+    }
+
+    #[test]
+    fn sharded_exp_is_deterministic_across_calls() {
+        let cfg = ExpConfig {
+            workload: Workload::Gnmt,
+            policy: PolicyCfg::Lazy,
+            rate: 500.0,
+            duration: SEC,
+            runs: 2,
+            shards: 3,
+            dispatch: DispatchPolicy::P2C { seed: 5 },
+            ..ExpConfig::default()
+        };
+        let a = run(&cfg);
+        let b = run(&cfg);
+        assert_eq!(a.pooled_ns, b.pooled_ns);
+        assert_eq!(a.run_p99_ms, b.run_p99_ms);
     }
 
     #[test]

@@ -1,0 +1,68 @@
+//! Machine-readable output for the bench binaries.
+//!
+//! Every bench accepts `--json`: instead of its human tables it prints a
+//! single document, `{"bench": "<name>", "points": [...]}`, with one point
+//! per measured configuration. Points built from
+//! [`crate::metrics::Aggregate::to_json`] carry the full statistics —
+//! mean/p25/p75/p99 latency, throughput, violation rate, and the merged
+//! queue-wait and batch-size histograms plus all policy counters.
+
+use crate::util::json::Json;
+
+/// Collects one JSON point per measured configuration; prints a single
+/// document at exit when `--json` was passed.
+pub struct JsonReport {
+    bench: &'static str,
+    enabled: bool,
+    points: Vec<Json>,
+}
+
+impl JsonReport {
+    /// Reads `--json` from the process arguments.
+    pub fn from_args(bench: &'static str) -> JsonReport {
+        JsonReport {
+            bench,
+            enabled: std::env::args().any(|a| a == "--json"),
+            points: Vec::new(),
+        }
+    }
+
+    /// `--json` mode is on: the bench should skip its human output.
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Add one measured point (kept even when disabled; the cost is one
+    /// small tree per point).
+    pub fn push(&mut self, point: Json) {
+        self.points.push(point);
+    }
+
+    /// Print the collected document when enabled.
+    pub fn print(self) {
+        if self.enabled {
+            let doc = Json::obj()
+                .set("bench", self.bench)
+                .set("points", Json::Arr(self.points));
+            println!("{}", doc.render());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_collects_points() {
+        let mut r = JsonReport {
+            bench: "test",
+            enabled: true,
+            points: Vec::new(),
+        };
+        assert!(r.enabled());
+        r.push(Json::obj().set("x", 1));
+        r.push(Json::obj().set("x", 2));
+        assert_eq!(r.points.len(), 2);
+    }
+}

@@ -30,6 +30,7 @@ use lazybatching::model::{LatencyTable, Workload, WMT_MEAN_IN, WMT_MEAN_OUT};
 use lazybatching::npu::systolic::SystolicModel;
 #[cfg(feature = "real")]
 use lazybatching::server::{self, ServeConfig, ServePolicy, ServeRequest};
+use lazybatching::sim::DispatchPolicy;
 use lazybatching::telemetry::{perfetto, registry::ns_to_ms, RecordingTracer, TracerRef};
 use lazybatching::traffic::PoissonArrivals;
 use lazybatching::util::cli::Args;
@@ -70,10 +71,14 @@ fn print_help() {
          USAGE: lazybatchingd <simulate|sweep|trace|serve|workloads> [flags]\n\n\
          simulate   --workload W --policy <serial|graphb|lazy|oracle> [--btw MS]\n\
          \x20          [--rate R] [--sla MS] [--runs N] [--duration S] [--gpu] [--json]\n\
+         \x20          [--shards N] [--dispatch <rr|jsq|p2c>]\n\
          sweep      --workload W [--rates a,b,c] [--sla MS] [--runs N]\n\
+         \x20          [--shards N] [--dispatch <rr|jsq|p2c>]\n\
          trace      --workload W --policy P [--rate R] [--sla MS] [--duration S]\n\
-         \x20          [--seed N] [--out FILE.json] [--limit N]\n\
-         \x20          (Perfetto/chrome://tracing export + per-request timelines)\n\
+         \x20          [--seed N] [--out FILE.json] [--limit N] [--trace-cap N]\n\
+         \x20          [--shards N] [--dispatch <rr|jsq|p2c>]\n\
+         \x20          (Perfetto/chrome://tracing export + per-request timelines;\n\
+         \x20           with --shards > 1, one processor track per shard)\n\
          serve      [--artifacts DIR] [--rate R] [--requests N] [--sla MS]\n\
          \x20          [--policy <lazy|graphb|serial>] [--btw MS] [--max-batch B]\n\
          \x20          (requires a binary built with --features real)\n\
@@ -89,6 +94,12 @@ fn parse_policy(args: &Args) -> Result<PolicyCfg> {
         "oracle" => PolicyCfg::Oracle,
         p => bail!("unknown policy '{p}'"),
     })
+}
+
+fn parse_dispatch(args: &Args) -> Result<DispatchPolicy> {
+    let name = args.get_or("dispatch", "jsq");
+    DispatchPolicy::from_name(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown dispatch policy '{name}' (expected rr, jsq, p2c)"))
 }
 
 fn parse_workload(args: &Args) -> Result<Workload> {
@@ -116,21 +127,21 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         } else {
             DeviceKind::Npu
         },
+        shards: args.get_usize("shards", 1)?,
+        dispatch: parse_dispatch(args)?,
         ..ExpConfig::default()
     };
     let agg = exp::run(&cfg);
     let (lat_lo, lat_hi) = agg.latency_p25_p75();
     if args.flag("json") {
-        let j = Json::obj()
+        let j = agg
+            .to_json(cfg.sla)
             .set("workload", cfg.workload.name())
             .set("policy", cfg.policy.name())
             .set("rate", cfg.rate)
-            .set("mean_latency_ms", agg.mean_latency_ms())
-            .set("latency_p25_ms", lat_lo)
-            .set("latency_p75_ms", lat_hi)
-            .set("p99_ms", agg.p99_ms())
-            .set("throughput", agg.mean_throughput())
-            .set("violation_rate", agg.violation_rate(cfg.sla));
+            .set("shards", cfg.shards)
+            .set("dispatch", cfg.dispatch.name())
+            .set("throughput", agg.mean_throughput());
         println!("{}", j.render());
     } else {
         println!(
@@ -152,6 +163,12 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             "SLA violation rate".to_string(),
             f3(agg.violation_rate(cfg.sla)),
         ]);
+        if cfg.shards > 1 {
+            t.row(vec![
+                "shards".to_string(),
+                format!("{} ({})", cfg.shards, cfg.dispatch.name()),
+            ]);
+        }
         t.print();
     }
     Ok(())
@@ -170,6 +187,8 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             runs,
             sla,
             duration: SEC,
+            shards: args.get_usize("shards", 1)?,
+            dispatch: parse_dispatch(args)?,
             ..ExpConfig::default()
         };
         let mut policies = vec![PolicyCfg::Serial, PolicyCfg::Lazy, PolicyCfg::Oracle];
@@ -205,15 +224,51 @@ fn cmd_trace(args: &Args) -> Result<()> {
         sla: args.get_u64("sla", 100)? * MS,
         dec_timesteps: args.get_usize("dec-timesteps", 0)?,
         max_batch: args.get_usize("max-batch", 64)?,
+        shards: args.get_usize("shards", 1)?,
+        dispatch: parse_dispatch(args)?,
         ..ExpConfig::default()
     };
     let out = args.get_or("out", "trace.json").to_string();
+    let seed = args.get_u64("seed", 42)?;
+    // --trace-cap bounds each recording ring (drop-oldest); 0 = unbounded
+    let cap = args.get_usize("trace-cap", 0)?;
+    let new_rec = || {
+        if cap > 0 {
+            RecordingTracer::bounded(cap)
+        } else {
+            RecordingTracer::new()
+        }
+    };
     let table = exp::make_table(cfg.workload, cfg.device, cfg.max_batch);
-    let rec = RecordingTracer::new();
-    let tracer: TracerRef = rec.clone();
-    let result = exp::run_once_traced(&cfg, table, args.get_u64("seed", 42)?, &tracer);
-    let events = rec.take();
-    std::fs::write(&out, perfetto::chrome_trace(&events).render())?;
+    let (result, events, dropped) = if cfg.shards > 1 {
+        let recs: Vec<Arc<RecordingTracer>> = (0..cfg.shards).map(|_| new_rec()).collect();
+        let tracers: Vec<TracerRef> = recs.iter().map(|r| r.clone() as TracerRef).collect();
+        let run = exp::run_sharded_traced(&cfg, table, seed, &tracers);
+        let streams: Vec<_> = recs.iter().map(|r| r.take()).collect();
+        let dropped: u64 = recs.iter().map(|r| r.dropped_events()).sum();
+        std::fs::write(&out, perfetto::chrome_trace_sharded(&streams).render())?;
+        println!("{} shards via {} dispatch:", cfg.shards, cfg.dispatch.name());
+        let counts = run.per_shard_requests();
+        for (i, r) in run.per_shard.iter().enumerate() {
+            println!(
+                "  shard {i}: {} requests, {:.1}% busy",
+                counts[i],
+                r.utilization() * 100.0
+            );
+        }
+        // merged stream (global time order) for the summaries below
+        let mut events: Vec<_> = streams.into_iter().flatten().collect();
+        events.sort_by_key(|e| e.timestamp());
+        (run.merged, events, dropped)
+    } else {
+        let rec = new_rec();
+        let tracer: TracerRef = rec.clone();
+        let result = exp::run_once_traced(&cfg, table, seed, &tracer);
+        let dropped = rec.dropped_events();
+        let events = rec.take();
+        std::fs::write(&out, perfetto::chrome_trace(&events).render())?;
+        (result, events, dropped)
+    };
     println!(
         "{} / {} @ {} req/s: {} events for {} requests -> {out}\n\
          (open in ui.perfetto.dev or chrome://tracing)\n",
@@ -223,6 +278,9 @@ fn cmd_trace(args: &Args) -> Result<()> {
         events.len(),
         result.latencies.len(),
     );
+    if dropped > 0 {
+        println!("note: ring capacity {cap} dropped the {dropped} oldest events\n");
+    }
 
     // compact per-request timeline summary
     let timelines = perfetto::request_timelines(&events);

@@ -9,8 +9,9 @@
 
 use crate::sim::RunResult;
 use crate::telemetry::{Histogram, Registry};
+use crate::util::json::Json;
 use crate::util::stats::{self, Summary};
-use crate::Nanos;
+use crate::{Nanos, MS};
 
 /// Aggregate over N independent simulation runs of one configuration.
 #[derive(Debug, Clone)]
@@ -117,6 +118,44 @@ impl Aggregate {
     pub fn cdf(&self, thresholds_ms: &[f64]) -> Vec<f64> {
         stats::cdf_at_sorted(&self.pooled_ms, thresholds_ms)
     }
+
+    /// Empirical CDF at integer-ns thresholds, reusing the sorted
+    /// `pooled_ns` the way [`Aggregate::violation_rate`] does: a sample
+    /// exactly at the threshold counts as within, so
+    /// `cdf_ns(&[sla])[0] + violation_rate(sla) == 1` at every deadline.
+    pub fn cdf_ns(&self, thresholds_ns: &[Nanos]) -> Vec<f64> {
+        if self.pooled_ns.is_empty() {
+            return vec![0.0; thresholds_ns.len()];
+        }
+        let n = self.pooled_ns.len() as f64;
+        thresholds_ns
+            .iter()
+            .map(|&t| self.pooled_ns.partition_point(|&l| l <= t) as f64 / n)
+            .collect()
+    }
+
+    /// Machine-readable summary: the paper-figure statistics plus the
+    /// merged queue-wait / batch-size histograms and all policy counters.
+    /// Every bench binary's `--json` mode emits its points through here.
+    pub fn to_json(&self, sla: Nanos) -> Json {
+        let (lat_p25, lat_p75) = self.latency_p25_p75();
+        let (thr_p25, thr_p75) = self.throughput_p25_p75();
+        Json::obj()
+            .set("runs", self.run_mean_latency_ms.len())
+            .set("requests", self.pooled_ns.len())
+            .set("mean_latency_ms", self.mean_latency_ms())
+            .set("latency_p25_ms", lat_p25)
+            .set("latency_p75_ms", lat_p75)
+            .set("p99_ms", self.p99_ms())
+            .set("mean_throughput", self.mean_throughput())
+            .set("throughput_p25", thr_p25)
+            .set("throughput_p75", thr_p75)
+            .set("sla_ms", sla as f64 / MS as f64)
+            .set("violation_rate", self.violation_rate(sla))
+            .set("queue_wait_hist", self.queue_wait_hist.to_json())
+            .set("batch_size_hist", self.batch_size_hist.to_json())
+            .set("counters", self.stats.to_json())
+    }
 }
 
 #[cfg(test)]
@@ -180,6 +219,72 @@ mod tests {
         let a = Aggregate::from_runs(&[run.clone()]);
         assert_eq!(a.violation_rate(sla), run.violation_rate(sla));
         assert!((a.violation_rate(sla) - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merged_multi_shard_violation_rate_exact_at_boundaries() {
+        // regression: a merged sharded result must keep integer-ns
+        // boundary semantics — exactly-at-deadline is NOT a violation —
+        // after ids interleave across shards and the merge re-sorts them
+        let sla = 40 * MS;
+        let mut shard_a = fake_run_ns(&[]);
+        shard_a.latencies = vec![(0, sla - 1), (2, sla)];
+        let mut shard_b = fake_run_ns(&[]);
+        shard_b.latencies = vec![(1, sla), (3, sla + 1)];
+        for s in [&mut shard_a, &mut shard_b] {
+            s.queue_wait_hist.record(0);
+            s.queue_wait_hist.record(0);
+        }
+        let merged = crate::sim::merge_runs(&[shard_a, shard_b]);
+        let ids: Vec<u64> = merged.latencies.iter().map(|&(id, _)| id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+        let a = Aggregate::from_runs(&[merged.clone()]);
+        // only sla+1 violates: the two exactly-at-deadline samples do not
+        assert_eq!(a.violation_rate(sla), merged.violation_rate(sla));
+        assert!((a.violation_rate(sla) - 0.25).abs() < 1e-12);
+        assert!((a.violation_rate(sla - 1) - 0.75).abs() < 1e-12);
+        assert_eq!(a.violation_rate(sla + 1), 0.0);
+    }
+
+    #[test]
+    fn cdf_ns_exact_boundaries_complement_violation_rate() {
+        let a = Aggregate::from_runs(&[fake_run_ns(&[
+            10 * MS,
+            20 * MS,
+            40 * MS,
+            80 * MS,
+        ])]);
+        let c = a.cdf_ns(&[9 * MS, 10 * MS, 40 * MS, 100 * MS]);
+        assert_eq!(c, vec![0.0, 0.25, 0.75, 1.0]);
+        for sla in [10 * MS, 25 * MS, 40 * MS, 40 * MS + 1] {
+            assert!(
+                (a.cdf_ns(&[sla])[0] + a.violation_rate(sla) - 1.0).abs() < 1e-12,
+                "cdf_ns and violation_rate disagree at {sla}"
+            );
+        }
+        assert_eq!(Aggregate::from_runs(&[]).cdf_ns(&[MS]), vec![0.0]);
+    }
+
+    #[test]
+    fn aggregate_to_json_carries_histograms_and_counters() {
+        let mut r = fake_run(&[1.0, 2.0, 3.0]);
+        r.queue_wait_hist.record(5 * crate::US);
+        r.batch_size_hist.record(4);
+        r.stats.admitted = 3;
+        let a = Aggregate::from_runs(&[r]);
+        let text = a.to_json(40 * MS).render();
+        for key in [
+            "mean_latency_ms",
+            "p99_ms",
+            "mean_throughput",
+            "violation_rate",
+            "queue_wait_hist",
+            "batch_size_hist",
+            "counters",
+            "sla_ms",
+        ] {
+            assert!(text.contains(&format!("\"{key}\"")), "missing {key}: {text}");
+        }
     }
 
     #[test]

@@ -94,10 +94,13 @@ impl RunResult {
 }
 
 /// The engine. One instance runs one trace against one policy.
+///
+/// Fields are crate-visible so [`crate::sim::shard`] can drive the same
+/// validation/cursor logic per shard without duplicating it.
 pub struct SimEngine {
     /// Per-model latency tables (index = `RequestSpec::model_idx`).
-    tables: Vec<Arc<LatencyTable>>,
-    cfg: SimConfig,
+    pub(crate) tables: Vec<Arc<LatencyTable>>,
+    pub(crate) cfg: SimConfig,
 }
 
 impl SimEngine {
@@ -269,7 +272,7 @@ impl SimEngine {
     }
 
     /// Advance each member's cursor past one execution of `exec.tpos`.
-    fn advance_cursors(&self, reqs: &mut Reqs, exec: &Exec) -> Vec<Transition> {
+    pub(crate) fn advance_cursors(&self, reqs: &mut Reqs, exec: &Exec) -> Vec<Transition> {
         let mut transitions = Vec::with_capacity(exec.reqs.len());
         // all members share a model (validated at issue time)
         let model = reqs.get(exec.reqs[0]).spec.model_idx;
@@ -305,7 +308,7 @@ impl SimEngine {
     }
 
     /// Reject malformed executions loudly.
-    fn validate_exec(&self, reqs: &Reqs, exec: &Exec) {
+    pub(crate) fn validate_exec(&self, reqs: &Reqs, exec: &Exec) {
         assert!(!exec.reqs.is_empty(), "empty execution");
         assert!(
             exec.reqs.len() <= self.cfg.max_batch,

@@ -1,12 +1,18 @@
 //! Discrete-event simulation at node granularity.
 //!
-//! The engine owns the (single) backend processor, the virtual clock and
-//! all request cursors; a [`crate::coordinator::Batcher`] policy decides
-//! what to run at each node boundary. Because the engine — not the policy
-//! — advances cursors, validates executions and records completions, every
+//! The engine owns the backend processor, the virtual clock and all
+//! request cursors; a [`crate::coordinator::Batcher`] policy decides what
+//! to run at each node boundary. Because the engine — not the policy —
+//! advances cursors, validates executions and records completions, every
 //! policy is measured under identical rules and a buggy policy fails loudly
 //! instead of quietly inflating its own numbers.
+//!
+//! [`engine`] simulates one NPU; [`shard`] scales the same event loop to N
+//! NPUs behind a shared admission front-end with pluggable dispatch
+//! (round-robin / join-shortest-queue / power-of-two-choices).
 
 pub mod engine;
+pub mod shard;
 
 pub use engine::{RunResult, SimConfig, SimEngine};
+pub use shard::{merge_runs, DispatchPolicy, ShardRun, ShardedEngine};

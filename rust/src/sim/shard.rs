@@ -1,0 +1,934 @@
+//! Multi-NPU sharded simulation with a shared admission front-end.
+//!
+//! The paper evaluates LazyBatching on one NPU; a serving farm runs many.
+//! [`ShardedEngine`] owns N per-NPU simulations (one policy instance and
+//! one virtual processor each) behind a single admission front-end: every
+//! arriving request is routed once, at arrival time, by a pluggable
+//! [`DispatchPolicy`] that reads live per-shard state (queue depth and the
+//! shard's predicted next-idle time). After routing, shards are fully
+//! independent — exactly the deployment model of a load balancer fronting
+//! N single-accelerator LazyBatching servers.
+//!
+//! ## Execution model
+//!
+//! Each shard runs the same node-granularity event loop as
+//! [`SimEngine::run_traced`] (the cursor-advance and exec-validation logic
+//! is shared, not reimplemented), restructured into a steppable
+//! [`ShardCore`] so the front-end can interleave N shards on one global
+//! virtual clock. Event ordering mirrors the single-engine tie-breaks
+//! exactly: at any instant, completions are processed before arrivals,
+//! and arrivals before timers; shards are stepped in index order. A
+//! one-shard `ShardedEngine` therefore reproduces `SimEngine::run`
+//! latency-for-latency (pinned by a test below).
+//!
+//! ## Request ids
+//!
+//! Shards operate on shard-local dense request ids (the invariant the
+//! [`Reqs`] store and every policy relies on). The front-end keeps the
+//! local→global mapping; merged results and all telemetry events are
+//! reported in *global* (trace) ids — a [`RemapTracer`] rewrites ids on
+//! every recorded event, so per-shard Perfetto streams join naturally on
+//! request tracks.
+
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::policy::{
+    Action, Batcher, Completion, Exec, PolicyStats, ReqId, Reqs,
+};
+use crate::sim::engine::{RunResult, SimEngine};
+use crate::telemetry::{self, Event, Histogram, Tracer, TracerRef};
+use crate::traffic::{RequestSpec, Trace};
+use crate::util::Prng;
+use crate::Nanos;
+
+/// How the admission front-end routes an arriving request to a shard.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchPolicy {
+    /// Strict rotation, ignoring load. The baseline.
+    RoundRobin,
+    /// Route to the shard with the fewest in-flight requests; ties break
+    /// on the earlier predicted idle time (the front-end's slack proxy),
+    /// then on shard index.
+    JoinShortestQueue,
+    /// Power-of-two-choices: sample two distinct shards uniformly and
+    /// take the shorter queue. Near-JSQ balance at O(1) state reads.
+    P2C { seed: u64 },
+}
+
+impl DispatchPolicy {
+    /// Parse a CLI name (`rr` / `jsq` / `p2c`).
+    pub fn from_name(name: &str) -> Option<DispatchPolicy> {
+        match name {
+            "rr" | "roundrobin" | "round-robin" => Some(DispatchPolicy::RoundRobin),
+            "jsq" => Some(DispatchPolicy::JoinShortestQueue),
+            "p2c" => Some(DispatchPolicy::P2C { seed: 0x9E3779B9 }),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DispatchPolicy::RoundRobin => "rr",
+            DispatchPolicy::JoinShortestQueue => "jsq",
+            DispatchPolicy::P2C { .. } => "p2c",
+        }
+    }
+
+    /// Same policy with its internal randomness re-salted (so each seeded
+    /// run of an experiment draws independent P2C choices while staying
+    /// reproducible).
+    pub fn reseeded(self, salt: u64) -> DispatchPolicy {
+        match self {
+            DispatchPolicy::P2C { seed } => DispatchPolicy::P2C {
+                seed: seed ^ salt.rotate_left(17),
+            },
+            other => other,
+        }
+    }
+}
+
+/// Per-run dispatcher state (rotation counter / RNG).
+struct Dispatcher {
+    policy: DispatchPolicy,
+    rr_next: usize,
+    rng: Prng,
+}
+
+impl Dispatcher {
+    fn new(policy: DispatchPolicy) -> Dispatcher {
+        let seed = match policy {
+            DispatchPolicy::P2C { seed } => seed,
+            _ => 0,
+        };
+        Dispatcher {
+            policy,
+            rr_next: 0,
+            rng: Prng::new(seed ^ 0x5AD5_D15B),
+        }
+    }
+
+    /// Choose the shard for the next arrival given live shard state.
+    fn pick(&mut self, cores: &[ShardCore<'_>]) -> usize {
+        let n = cores.len();
+        debug_assert!(n > 0);
+        // (depth, predicted idle time): the front-end's view of load.
+        let key = |i: usize| (cores[i].in_flight(), cores[i].busy_end().unwrap_or(0));
+        match self.policy {
+            DispatchPolicy::RoundRobin => {
+                let s = self.rr_next % n;
+                self.rr_next = (self.rr_next + 1) % n;
+                s
+            }
+            DispatchPolicy::JoinShortestQueue => {
+                (0..n).min_by_key(|&i| (key(i), i)).unwrap()
+            }
+            DispatchPolicy::P2C { .. } => {
+                if n == 1 {
+                    return 0;
+                }
+                let a = self.rng.next_range(n as u64) as usize;
+                let mut b = self.rng.next_range(n as u64 - 1) as usize;
+                if b >= a {
+                    b += 1;
+                }
+                // prefer the less-loaded choice; stable tie-break on index
+                if (key(b), b) < (key(a), a) {
+                    b
+                } else {
+                    a
+                }
+            }
+        }
+    }
+}
+
+/// Rewrites shard-local request ids to global trace ids on every event
+/// before forwarding to the run's real tracer. Costs nothing when the
+/// inner tracer is disabled (the `enabled()` gate short-circuits at
+/// every emission site before an event is built).
+struct RemapTracer {
+    inner: TracerRef,
+    /// local id (index) → global id; grows on every injection.
+    map: Mutex<Vec<ReqId>>,
+}
+
+impl RemapTracer {
+    fn new(inner: TracerRef) -> Arc<RemapTracer> {
+        Arc::new(RemapTracer {
+            inner,
+            map: Mutex::new(Vec::new()),
+        })
+    }
+
+    fn push(&self, global: ReqId) {
+        self.map.lock().unwrap().push(global);
+    }
+}
+
+impl Tracer for RemapTracer {
+    fn enabled(&self) -> bool {
+        self.inner.enabled()
+    }
+
+    fn record(&self, mut ev: Event) {
+        {
+            let map = self.map.lock().unwrap();
+            let g = |id: &mut ReqId| *id = map[*id as usize];
+            match &mut ev {
+                Event::Arrival { req, .. } | Event::Release { req, .. } => g(req),
+                Event::Admitted { reqs, .. } | Event::SlackEstimate { reqs, .. } => {
+                    reqs.iter_mut().for_each(g)
+                }
+                Event::Preempt {
+                    preempted,
+                    admitted,
+                    ..
+                } => {
+                    preempted.iter_mut().for_each(g);
+                    admitted.iter_mut().for_each(g);
+                }
+                Event::NodeExec { members, .. } => members.iter_mut().for_each(g),
+                Event::RunStart { .. }
+                | Event::Denied { .. }
+                | Event::Merge { .. }
+                | Event::Stall { .. } => {}
+            }
+        }
+        self.inner.record(ev);
+    }
+}
+
+/// One shard: a steppable replica of the [`SimEngine`] event loop.
+///
+/// The front-end owns the global clock and the arrival stream; the core
+/// owns everything downstream of admission — request states, the busy
+/// processor, the policy timer, and result accounting.
+pub(crate) struct ShardCore<'e> {
+    eng: &'e SimEngine,
+    policy: Box<dyn Batcher>,
+    tracer: TracerRef,
+    remap: Arc<RemapTracer>,
+    reqs: Reqs,
+    /// local id (index) → global trace id.
+    globals: Vec<ReqId>,
+    busy: Option<(Exec, Nanos, Nanos)>, // (exec, start, end)
+    timer: Option<Nanos>,
+    now: Nanos,
+    released: usize,
+    latencies: Vec<(ReqId, Nanos)>, // local ids until `finish`
+    busy_total: Nanos,
+    node_execs: u64,
+    makespan: Nanos,
+    queue_wait_hist: Histogram,
+    batch_size_hist: Histogram,
+}
+
+impl<'e> ShardCore<'e> {
+    fn new(eng: &'e SimEngine, mut policy: Box<dyn Batcher>, tracer: TracerRef) -> ShardCore<'e> {
+        let remap = RemapTracer::new(tracer);
+        let tracer: TracerRef = remap.clone();
+        policy.attach_tracer(tracer.clone());
+        if tracer.enabled() {
+            tracer.record(Event::RunStart {
+                policy: policy.name(),
+            });
+        }
+        ShardCore {
+            eng,
+            policy,
+            tracer,
+            remap,
+            reqs: Reqs::default(),
+            globals: Vec::new(),
+            busy: None,
+            timer: None,
+            now: 0,
+            released: 0,
+            latencies: Vec::new(),
+            busy_total: 0,
+            node_execs: 0,
+            makespan: 0,
+            queue_wait_hist: Histogram::queue_wait(),
+            batch_size_hist: Histogram::batch_size(),
+        }
+    }
+
+    /// Requests injected but not yet released (the dispatcher's "queue
+    /// depth", counting the one on the processor).
+    pub(crate) fn in_flight(&self) -> usize {
+        self.globals.len() - self.released
+    }
+
+    /// When the in-flight node execution completes, if any (the
+    /// dispatcher's predicted next-idle time).
+    pub(crate) fn busy_end(&self) -> Option<Nanos> {
+        self.busy.as_ref().map(|&(_, _, end)| end)
+    }
+
+    /// Earliest shard-internal event: node completion or policy timer.
+    fn next_event(&self) -> Option<Nanos> {
+        [self.busy_end(), self.timer].into_iter().flatten().min()
+    }
+
+    fn check_clock(&mut self, t: Nanos) {
+        assert!(t >= self.now, "time went backwards");
+        self.now = t;
+        assert!(
+            t <= self.eng.cfg.max_sim_time,
+            "simulation exceeded max_sim_time (stuck policy?)"
+        );
+    }
+
+    /// Process the node completion due at `t`. Returns how many requests
+    /// the policy released.
+    fn on_completion(&mut self, t: Nanos) -> usize {
+        self.check_clock(t);
+        let (exec, start, _end) = self.busy.take().unwrap();
+        self.busy_total += t - start;
+        if self.tracer.enabled() {
+            self.tracer.record(Event::NodeExec {
+                start,
+                dur: t - start,
+                tpos: exec.tpos,
+                members: exec.reqs.clone(),
+                padded: exec.padded,
+            });
+        }
+        let transitions = self.eng.advance_cursors(&mut self.reqs, &exec);
+        let completion = Completion { exec, transitions };
+        let mut released = Vec::new();
+        self.policy
+            .on_complete(t, &self.reqs, &completion, &mut released);
+        let n = released.len();
+        for id in released {
+            let st = self.reqs.get_mut(id);
+            assert!(st.done, "policy released unfinished request {id}");
+            assert!(!st.released, "double release of request {id}");
+            st.released = true;
+            let latency = t - st.spec.arrival;
+            let queue_wait = st.first_issue.map(|f| f - st.spec.arrival).unwrap_or(0);
+            self.queue_wait_hist.record(queue_wait);
+            if self.tracer.enabled() {
+                self.tracer.record(Event::Release {
+                    t,
+                    req: id,
+                    latency,
+                    queue_wait,
+                });
+            }
+            self.latencies.push((id, latency));
+            self.released += 1;
+            self.makespan = t;
+        }
+        n
+    }
+
+    /// Admit one request routed here by the front-end.
+    fn inject(&mut self, spec: RequestSpec) {
+        self.check_clock(spec.arrival);
+        let local = self.globals.len() as ReqId;
+        self.globals.push(spec.id);
+        self.remap.push(spec.id);
+        let local_spec = RequestSpec { id: local, ..spec };
+        self.reqs.insert(local_spec);
+        if self.tracer.enabled() {
+            self.tracer.record(Event::Arrival {
+                t: spec.arrival,
+                req: local,
+                model: spec.model_idx,
+                in_len: spec.in_len,
+                out_len: spec.out_len,
+            });
+        }
+        self.policy.on_arrival(spec.arrival, &self.reqs, local);
+    }
+
+    /// Fire the policy timer due at `t`.
+    fn on_timer(&mut self, t: Nanos) {
+        self.check_clock(t);
+        self.timer = None;
+        self.policy.on_timer(t, &self.reqs);
+    }
+
+    /// Consult the policy while the processor is idle — the same
+    /// issue/validate/sleep block as the single-engine loop. With zero
+    /// live requests there is nothing a policy may legally execute, so
+    /// the consultation is skipped (every shipped policy returns a
+    /// stateless `Sleep` in that situation).
+    fn pump(&mut self, t: Nanos) {
+        if self.busy.is_some() || self.in_flight() == 0 {
+            return;
+        }
+        match self.policy.next_action(t, &self.reqs) {
+            Action::Execute(exec) => {
+                self.eng.validate_exec(&self.reqs, &exec);
+                let model = self.reqs.get(exec.reqs[0]).spec.model_idx;
+                let lat = self.eng.tables[model].node_latency(exec.tpos, exec.reqs.len());
+                for &id in &exec.reqs {
+                    let st = self.reqs.get_mut(id);
+                    if st.first_issue.is_none() {
+                        st.first_issue = Some(t);
+                    }
+                }
+                self.node_execs += 1;
+                self.batch_size_hist.record(exec.reqs.len() as u64);
+                self.busy = Some((exec, t, t + lat.max(1)));
+            }
+            Action::Sleep { until } => {
+                if let Some(u) = until {
+                    assert!(
+                        u > t,
+                        "policy requested a wake-up in the past ({u} <= {t})"
+                    );
+                }
+                self.timer = until;
+            }
+        }
+    }
+
+    /// Close out the shard: remap latencies to global ids and package a
+    /// [`RunResult`] identical in shape to a single-engine run.
+    fn finish(mut self) -> RunResult {
+        for (id, _) in &mut self.latencies {
+            *id = self.globals[*id as usize];
+        }
+        RunResult {
+            latencies: self.latencies,
+            makespan: self.makespan,
+            busy: self.busy_total,
+            node_execs: self.node_execs,
+            stats: self.policy.stats(),
+            queue_wait_hist: self.queue_wait_hist,
+            batch_size_hist: self.batch_size_hist,
+        }
+    }
+}
+
+/// Outcome of one sharded run: the cross-shard merge plus the per-shard
+/// breakdown the scaling benches and the Perfetto export report.
+#[derive(Debug, Clone)]
+pub struct ShardRun {
+    /// Cross-shard merge, shaped like a single-engine [`RunResult`]:
+    /// latencies in global-id order, `makespan` = latest release across
+    /// shards, `busy`/`node_execs`/histograms/counters summed
+    /// (`max_batch_formed` is a max, not a sum). Note `busy` is total
+    /// device-busy time across N processors, so `merged.utilization()`
+    /// can legitimately exceed 1.0 — use [`ShardRun::mean_utilization`].
+    pub merged: RunResult,
+    /// One [`RunResult`] per shard, latencies already in global ids.
+    pub per_shard: Vec<RunResult>,
+    /// Shard index each request was routed to (indexed by global id).
+    pub assignment: Vec<usize>,
+}
+
+impl ShardRun {
+    pub fn shards(&self) -> usize {
+        self.per_shard.len()
+    }
+
+    /// Per-shard processor utilization over that shard's makespan.
+    pub fn per_shard_utilization(&self) -> Vec<f64> {
+        self.per_shard.iter().map(|r| r.utilization()).collect()
+    }
+
+    /// Fleet utilization: total busy time over N processors × the
+    /// aggregate makespan.
+    pub fn mean_utilization(&self) -> f64 {
+        if self.merged.makespan == 0 || self.per_shard.is_empty() {
+            return 0.0;
+        }
+        self.merged.busy as f64
+            / (self.per_shard.len() as f64 * self.merged.makespan as f64)
+    }
+
+    /// Requests routed to each shard.
+    pub fn per_shard_requests(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.per_shard.len()];
+        for &s in &self.assignment {
+            counts[s] += 1;
+        }
+        counts
+    }
+}
+
+/// Merge per-shard results into one aggregate [`RunResult`].
+///
+/// Merged latencies are sorted by global request id (deterministic and
+/// order-insensitive for every downstream consumer); histograms and
+/// policy counters are summed, `max_batch_formed` is the max across
+/// shards.
+pub fn merge_runs(per_shard: &[RunResult]) -> RunResult {
+    assert!(!per_shard.is_empty(), "merge of zero shards");
+    let total: usize = per_shard.iter().map(|r| r.latencies.len()).sum();
+    let mut latencies = Vec::with_capacity(total);
+    let mut makespan = 0;
+    let mut busy = 0;
+    let mut node_execs = 0;
+    let mut stats = PolicyStats::default();
+    let mut queue_wait_hist = Histogram::queue_wait();
+    let mut batch_size_hist = Histogram::batch_size();
+    for r in per_shard {
+        latencies.extend_from_slice(&r.latencies);
+        makespan = makespan.max(r.makespan);
+        busy += r.busy;
+        node_execs += r.node_execs;
+        stats.preemptions += r.stats.preemptions;
+        stats.merges += r.stats.merges;
+        stats.node_execs += r.stats.node_execs;
+        stats.admitted += r.stats.admitted;
+        stats.denied += r.stats.denied;
+        stats.max_batch_formed = stats.max_batch_formed.max(r.stats.max_batch_formed);
+        for &(name, v) in &r.stats.extra {
+            stats.bump(name, v);
+        }
+        queue_wait_hist.merge(&r.queue_wait_hist);
+        batch_size_hist.merge(&r.batch_size_hist);
+    }
+    latencies.sort_unstable_by_key(|&(id, _)| id);
+    // shard-merge invariants (exercised by the CI debug-assertions pass):
+    // the shards partition the request set — no id may appear twice, and
+    // every released request must survive the merge.
+    debug_assert!(
+        latencies.windows(2).all(|w| w[0].0 < w[1].0),
+        "duplicate request id across shards"
+    );
+    assert_eq!(latencies.len(), total, "released requests lost in merge");
+    debug_assert_eq!(
+        queue_wait_hist.count(),
+        total as u64,
+        "queue-wait samples lost in merge"
+    );
+    RunResult {
+        latencies,
+        makespan,
+        busy,
+        node_execs,
+        stats,
+        queue_wait_hist,
+        batch_size_hist,
+    }
+}
+
+/// N per-NPU simulations behind one admission front-end.
+pub struct ShardedEngine {
+    engine: SimEngine,
+    shards: usize,
+    dispatch: DispatchPolicy,
+}
+
+impl ShardedEngine {
+    /// `shards` replicas of the device described by `tables`/`cfg`, fed
+    /// through `dispatch`.
+    pub fn new(
+        tables: Vec<Arc<crate::model::LatencyTable>>,
+        cfg: crate::sim::SimConfig,
+        shards: usize,
+        dispatch: DispatchPolicy,
+    ) -> ShardedEngine {
+        assert!(shards >= 1, "need at least one shard");
+        ShardedEngine {
+            engine: SimEngine::new(tables, cfg),
+            shards,
+            dispatch,
+        }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    pub fn dispatch(&self) -> DispatchPolicy {
+        self.dispatch
+    }
+
+    /// Run `trace` to completion, constructing one policy per shard via
+    /// `mk_policy(shard_idx)`. Untraced.
+    pub fn run(
+        &self,
+        trace: &Trace,
+        mk_policy: impl FnMut(usize) -> Box<dyn Batcher>,
+    ) -> ShardRun {
+        let tracers: Vec<TracerRef> = (0..self.shards).map(|_| telemetry::noop()).collect();
+        self.run_traced(trace, mk_policy, &tracers)
+    }
+
+    /// [`ShardedEngine::run`] with one tracer per shard: shard `i`'s
+    /// engine/policy events (request ids rewritten to global trace ids)
+    /// land in `tracers[i]`, ready for
+    /// [`crate::telemetry::perfetto::chrome_trace_sharded`].
+    pub fn run_traced(
+        &self,
+        trace: &Trace,
+        mut mk_policy: impl FnMut(usize) -> Box<dyn Batcher>,
+        tracers: &[TracerRef],
+    ) -> ShardRun {
+        assert_eq!(
+            tracers.len(),
+            self.shards,
+            "need exactly one tracer per shard"
+        );
+        let total = trace.requests.len();
+        let mut cores: Vec<ShardCore<'_>> = (0..self.shards)
+            .map(|i| ShardCore::new(&self.engine, mk_policy(i), tracers[i].clone()))
+            .collect();
+        let mut dispatcher = Dispatcher::new(self.dispatch);
+        let mut assignment: Vec<usize> = Vec::with_capacity(total);
+        let mut next_arrival = 0usize;
+        let mut released_total = 0usize;
+
+        while released_total < total {
+            // ---- earliest event across the arrival stream and all shards ----
+            let t_arr = trace.requests.get(next_arrival).map(|r| r.arrival);
+            let t_int = cores.iter().filter_map(|c| c.next_event()).min();
+            let Some(t) = [t_int, t_arr].into_iter().flatten().min() else {
+                let stuck: Vec<String> = cores
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, c)| c.in_flight() > 0)
+                    .map(|(i, c)| format!("shard {i}: {} in flight", c.in_flight()))
+                    .collect();
+                panic!(
+                    "policy stalled: {} of {total} requests unreleased, no \
+                     pending events ({})",
+                    total - released_total,
+                    stuck.join(", ")
+                );
+            };
+
+            // ---- same-instant ordering, mirroring the single engine ----
+            // 1) completions free processors first,
+            for core in &mut cores {
+                if core.busy_end() == Some(t) {
+                    released_total += core.on_completion(t);
+                    core.pump(t);
+                }
+            }
+            // 2) then arrivals are routed on the post-completion state,
+            while next_arrival < total && trace.requests[next_arrival].arrival == t {
+                let spec = trace.requests[next_arrival];
+                next_arrival += 1;
+                let s = dispatcher.pick(&cores);
+                assignment.push(s);
+                cores[s].inject(spec);
+                cores[s].pump(t);
+            }
+            // 3) and timers fire last.
+            for core in &mut cores {
+                if core.timer == Some(t) {
+                    core.on_timer(t);
+                    core.pump(t);
+                }
+            }
+        }
+
+        let per_shard: Vec<RunResult> = cores.into_iter().map(ShardCore::finish).collect();
+        let merged = merge_runs(&per_shard);
+        assert_eq!(
+            merged.latencies.len(),
+            total,
+            "sharded run lost requests in the merge"
+        );
+        debug_assert_eq!(assignment.len(), total);
+        ShardRun {
+            merged,
+            per_shard,
+            assignment,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{GraphBatching, LazyBatching, Serial, SlackMode};
+    use crate::model::workloads::Workload;
+    use crate::model::LatencyTable;
+    use crate::npu::systolic::SystolicModel;
+    use crate::sim::SimConfig;
+    use crate::telemetry::RecordingTracer;
+    use crate::{MS, SEC};
+
+    fn table(w: Workload) -> Arc<LatencyTable> {
+        Arc::new(LatencyTable::profile(
+            Arc::new(w.graph()),
+            &SystolicModel::default_npu(),
+            64,
+        ))
+    }
+
+    fn mk_policy(kind: &'static str, t: &Arc<LatencyTable>) -> Box<dyn Batcher> {
+        match kind {
+            "serial" => Box::new(Serial::new()),
+            "lazy" => Box::new(LazyBatching::with_defaults(
+                t.clone(),
+                100 * MS,
+                SlackMode::Conservative,
+            )),
+            "graphb" => Box::new(GraphBatching::new(t.graph.clone(), 35 * MS, 64)),
+            _ => unreachable!(),
+        }
+    }
+
+    fn run_sharded(
+        w: Workload,
+        kind: &'static str,
+        rate: f64,
+        dur: Nanos,
+        shards: usize,
+        dispatch: DispatchPolicy,
+    ) -> ShardRun {
+        let t = table(w);
+        let trace = Trace::generate(&t.graph, rate, dur, 42);
+        let engine = ShardedEngine::new(vec![t.clone()], SimConfig::default(), shards, dispatch);
+        engine.run(&trace, |_| mk_policy(kind, &t))
+    }
+
+    const ALL_DISPATCH: [DispatchPolicy; 3] = [
+        DispatchPolicy::RoundRobin,
+        DispatchPolicy::JoinShortestQueue,
+        DispatchPolicy::P2C { seed: 7 },
+    ];
+
+    #[test]
+    fn one_shard_reproduces_single_engine() {
+        // the sharded event loop must be a faithful restructuring: with
+        // N=1 every latency matches SimEngine::run exactly
+        for kind in ["serial", "lazy", "graphb"] {
+            let t = table(Workload::ResNet);
+            let trace = Trace::generate(&t.graph, 300.0, SEC, 42);
+            let engine = crate::sim::SimEngine::single(t.clone(), SimConfig::default());
+            let mut policy = mk_policy(kind, &t);
+            let single = engine.run(&trace, policy.as_mut());
+            let sharded = run_sharded(
+                Workload::ResNet,
+                kind,
+                300.0,
+                SEC,
+                1,
+                DispatchPolicy::JoinShortestQueue,
+            );
+            let mut expect = single.latencies.clone();
+            expect.sort_unstable_by_key(|&(id, _)| id);
+            assert_eq!(sharded.merged.latencies, expect, "{kind}");
+            assert_eq!(sharded.merged.node_execs, single.node_execs, "{kind}");
+            assert_eq!(sharded.merged.busy, single.busy, "{kind}");
+            assert_eq!(sharded.merged.makespan, single.makespan, "{kind}");
+        }
+    }
+
+    #[test]
+    fn all_dispatchers_complete_every_request() {
+        for dispatch in ALL_DISPATCH {
+            for shards in [1usize, 2, 4] {
+                let r = run_sharded(Workload::ResNet, "lazy", 400.0, SEC, shards, dispatch);
+                let t = table(Workload::ResNet);
+                let trace = Trace::generate(&t.graph, 400.0, SEC, 42);
+                assert_eq!(
+                    r.merged.latencies.len(),
+                    trace.requests.len(),
+                    "{:?}/{shards}",
+                    dispatch
+                );
+                assert_eq!(r.assignment.len(), trace.requests.len());
+                assert!(r.assignment.iter().all(|&s| s < shards));
+                assert!(r.merged.latencies.iter().all(|&(_, l)| l > 0));
+                // ids come back sorted and unique
+                assert!(r.merged.latencies.windows(2).all(|w| w[0].0 < w[1].0));
+            }
+        }
+    }
+
+    #[test]
+    fn dispatch_is_deterministic() {
+        // same trace + seed twice ⇒ identical per-shard assignment and
+        // merged latencies, for all three dispatch policies
+        for dispatch in ALL_DISPATCH {
+            let a = run_sharded(Workload::Gnmt, "lazy", 500.0, SEC, 4, dispatch);
+            let b = run_sharded(Workload::Gnmt, "lazy", 500.0, SEC, 4, dispatch);
+            assert_eq!(a.assignment, b.assignment, "{:?}", dispatch);
+            assert_eq!(a.merged.latencies, b.merged.latencies, "{:?}", dispatch);
+            assert_eq!(a.merged.node_execs, b.merged.node_execs, "{:?}", dispatch);
+            for (x, y) in a.per_shard.iter().zip(&b.per_shard) {
+                assert_eq!(x.latencies, y.latencies, "{:?}", dispatch);
+            }
+        }
+    }
+
+    #[test]
+    fn merge_preserves_counts_and_histograms() {
+        let r = run_sharded(
+            Workload::ResNet,
+            "lazy",
+            800.0,
+            SEC,
+            4,
+            DispatchPolicy::JoinShortestQueue,
+        );
+        let total: usize = r.per_shard.iter().map(|s| s.latencies.len()).sum();
+        assert_eq!(r.merged.latencies.len(), total);
+        assert_eq!(
+            r.merged.node_execs,
+            r.per_shard.iter().map(|s| s.node_execs).sum::<u64>()
+        );
+        assert_eq!(
+            r.merged.busy,
+            r.per_shard.iter().map(|s| s.busy).sum::<Nanos>()
+        );
+        assert_eq!(
+            r.merged.queue_wait_hist.count(),
+            r.per_shard.iter().map(|s| s.queue_wait_hist.count()).sum::<u64>()
+        );
+        assert_eq!(
+            r.merged.batch_size_hist.count(),
+            r.merged.node_execs,
+        );
+        assert_eq!(
+            r.merged.stats.max_batch_formed,
+            r.per_shard
+                .iter()
+                .map(|s| s.stats.max_batch_formed)
+                .max()
+                .unwrap()
+        );
+        assert_eq!(
+            r.merged.stats.admitted,
+            r.per_shard.iter().map(|s| s.stats.admitted).sum::<u64>()
+        );
+        // every shard saw some of the load
+        assert!(r.per_shard_requests().iter().all(|&c| c > 0));
+        assert!(r.mean_utilization() <= 1.0 + 1e-9);
+    }
+
+    #[test]
+    fn jsq_balances_a_saturating_load() {
+        let r = run_sharded(
+            Workload::ResNet,
+            "lazy",
+            4000.0,
+            SEC / 2,
+            4,
+            DispatchPolicy::JoinShortestQueue,
+        );
+        let counts = r.per_shard_requests();
+        let min = *counts.iter().min().unwrap() as f64;
+        let max = *counts.iter().max().unwrap() as f64;
+        assert!(min > 0.0);
+        assert!(
+            max / min < 1.5,
+            "JSQ left shards imbalanced: {counts:?}"
+        );
+    }
+
+    #[test]
+    fn throughput_scales_with_shards() {
+        // the bench acceptance shape, in miniature: a saturating Poisson
+        // trace must scale aggregate throughput near-linearly to 4 shards
+        let one = run_sharded(
+            Workload::ResNet,
+            "lazy",
+            8000.0,
+            SEC / 2,
+            1,
+            DispatchPolicy::JoinShortestQueue,
+        );
+        let four = run_sharded(
+            Workload::ResNet,
+            "lazy",
+            8000.0,
+            SEC / 2,
+            4,
+            DispatchPolicy::JoinShortestQueue,
+        );
+        let speedup = four.merged.throughput() / one.merged.throughput();
+        assert!(
+            speedup >= 3.0,
+            "4-shard speedup {speedup:.2}x below 3x \
+             ({:.0} vs {:.0} req/s)",
+            four.merged.throughput(),
+            one.merged.throughput()
+        );
+    }
+
+    #[test]
+    fn traced_shards_emit_global_ids() {
+        let t = table(Workload::ResNet);
+        let trace = Trace::generate(&t.graph, 300.0, SEC / 2, 11);
+        let engine = ShardedEngine::new(
+            vec![t.clone()],
+            SimConfig::default(),
+            2,
+            DispatchPolicy::RoundRobin,
+        );
+        let recs: Vec<Arc<RecordingTracer>> = (0..2).map(|_| RecordingTracer::new()).collect();
+        let tracers: Vec<TracerRef> = recs.iter().map(|r| r.clone() as TracerRef).collect();
+        let run = engine.run_traced(&trace, |_| mk_policy("lazy", &t), &tracers);
+        let mut seen_arrivals: Vec<ReqId> = Vec::new();
+        let mut seen_releases: Vec<ReqId> = Vec::new();
+        for (shard, rec) in recs.iter().enumerate() {
+            let events = rec.take();
+            assert_eq!(
+                events.iter().filter(|e| e.kind() == "run_start").count(),
+                1,
+                "shard {shard}"
+            );
+            for ev in &events {
+                match ev {
+                    Event::Arrival { req, .. } => {
+                        // global id routed to this shard
+                        assert_eq!(run.assignment[*req as usize], shard);
+                        seen_arrivals.push(*req);
+                    }
+                    Event::Release { req, latency, .. } => {
+                        let (_, l) = run
+                            .merged
+                            .latencies
+                            .iter()
+                            .find(|&&(id, _)| id == *req)
+                            .expect("released id missing from merge");
+                        assert_eq!(l, latency);
+                        seen_releases.push(*req);
+                    }
+                    _ => {}
+                }
+            }
+        }
+        seen_arrivals.sort_unstable();
+        seen_releases.sort_unstable();
+        let all: Vec<ReqId> = (0..trace.requests.len() as u64).collect();
+        assert_eq!(seen_arrivals, all);
+        assert_eq!(seen_releases, all);
+    }
+
+    #[test]
+    fn round_robin_rotates() {
+        let r = run_sharded(
+            Workload::ResNet,
+            "serial",
+            50.0,
+            SEC / 2,
+            3,
+            DispatchPolicy::RoundRobin,
+        );
+        for (i, &s) in r.assignment.iter().enumerate() {
+            assert_eq!(s, i % 3);
+        }
+    }
+
+    #[test]
+    fn p2c_reseeded_changes_choices_but_stays_deterministic() {
+        let a = DispatchPolicy::P2C { seed: 1 };
+        assert_eq!(a.reseeded(0), a);
+        assert_ne!(a.reseeded(99), a);
+        assert_eq!(a.reseeded(99), a.reseeded(99));
+        assert_eq!(DispatchPolicy::from_name("p2c").unwrap().name(), "p2c");
+        assert_eq!(
+            DispatchPolicy::from_name("jsq"),
+            Some(DispatchPolicy::JoinShortestQueue)
+        );
+        assert_eq!(
+            DispatchPolicy::from_name("rr"),
+            Some(DispatchPolicy::RoundRobin)
+        );
+        assert_eq!(DispatchPolicy::from_name("nope"), None);
+    }
+}

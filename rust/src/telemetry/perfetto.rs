@@ -111,6 +111,75 @@ fn metadata(pid: u64, tid: Option<u64>, which: &str, name: String) -> Json {
 pub fn chrome_trace(events: &[Event]) -> Json {
     let mut rows: Vec<Row> = Vec::with_capacity(events.len() * 2);
     let mut request_ids: Vec<ReqId> = Vec::new();
+    let policy = stream_rows(events, PID_PROCESSOR, PID_REQUESTS, &mut rows, &mut request_ids);
+    assemble(
+        rows,
+        vec![(PID_PROCESSOR, "processor".into(), policy)],
+        PID_REQUESTS,
+        request_ids,
+    )
+}
+
+/// Render per-shard event streams (request ids already global, as
+/// [`crate::sim::ShardedEngine::run_traced`] emits them) as one Chrome
+/// trace: one processor track group per shard (pid `0..n-1`, named
+/// `shard <i>`) and a single shared request track group (pid `n`) where
+/// every request's slices from whichever shard ran it line up on one
+/// timeline. With one stream the layout matches [`chrome_trace`].
+pub fn chrome_trace_sharded(streams: &[Vec<Event>]) -> Json {
+    assert!(!streams.is_empty(), "no shard streams to export");
+    let pid_requests = streams.len() as u64;
+    let mut rows: Vec<Row> =
+        Vec::with_capacity(streams.iter().map(|s| s.len() * 2).sum());
+    let mut request_ids: Vec<ReqId> = Vec::new();
+    let mut processors = Vec::with_capacity(streams.len());
+    for (i, events) in streams.iter().enumerate() {
+        let policy = stream_rows(events, i as u64, pid_requests, &mut rows, &mut request_ids);
+        processors.push((i as u64, format!("shard {i}"), policy));
+    }
+    assemble(rows, processors, pid_requests, request_ids)
+}
+
+/// Sort rows, prepend track-naming metadata, wrap in the trace envelope.
+/// `processors` is `(pid, process_name, thread_name)` per track group.
+fn assemble(
+    mut rows: Vec<Row>,
+    processors: Vec<(u64, String, String)>,
+    pid_requests: u64,
+    mut request_ids: Vec<ReqId>,
+) -> Json {
+    rows.sort_by_key(|r| r.ts);
+
+    let mut trace_events =
+        Vec::with_capacity(rows.len() + request_ids.len() + 2 * processors.len() + 2);
+    // metadata first: track names for every processor and every request
+    for (pid, pname, tname) in processors {
+        trace_events.push(metadata(pid, None, "process_name", pname));
+        trace_events.push(metadata(pid, Some(0), "thread_name", tname));
+    }
+    trace_events.push(metadata(pid_requests, None, "process_name", "requests".into()));
+    request_ids.sort_unstable();
+    request_ids.dedup();
+    for id in &request_ids {
+        trace_events.push(metadata(pid_requests, Some(*id), "thread_name", format!("req {id}")));
+    }
+    trace_events.extend(rows.into_iter().map(|r| r.json));
+
+    Json::obj()
+        .set("traceEvents", Json::Arr(trace_events))
+        .set("displayTimeUnit", "ms")
+}
+
+/// Convert one event stream into rows under the given processor/request
+/// pids, collecting the request ids seen. Returns the stream's policy
+/// name (from its `RunStart`).
+fn stream_rows(
+    events: &[Event],
+    pid_proc: u64,
+    pid_requests: u64,
+    rows: &mut Vec<Row>,
+    request_ids: &mut Vec<ReqId>,
+) -> String {
     let mut policy = String::from("unknown");
 
     for ev in events {
@@ -118,7 +187,7 @@ pub fn chrome_trace(events: &[Event]) -> Json {
             Event::RunStart { policy: p } => {
                 policy = p.clone();
                 rows.push(instant(
-                    PID_PROCESSOR,
+                    pid_proc,
                     0,
                     "run_start",
                     "meta",
@@ -135,7 +204,7 @@ pub fn chrome_trace(events: &[Event]) -> Json {
             } => {
                 request_ids.push(*req);
                 rows.push(instant(
-                    PID_REQUESTS,
+                    pid_requests,
                     *req,
                     "arrival",
                     "lifecycle",
@@ -148,7 +217,7 @@ pub fn chrome_trace(events: &[Event]) -> Json {
             }
             Event::Admitted { t, reqs, preempting } => {
                 rows.push(instant(
-                    PID_PROCESSOR,
+                    pid_proc,
                     0,
                     "admit",
                     "decision",
@@ -160,7 +229,7 @@ pub fn chrome_trace(events: &[Event]) -> Json {
             }
             Event::Denied { t, pending, reason } => {
                 rows.push(instant(
-                    PID_PROCESSOR,
+                    pid_proc,
                     0,
                     "deny",
                     "decision",
@@ -176,14 +245,14 @@ pub fn chrome_trace(events: &[Event]) -> Json {
                 predicted_slack,
             } => {
                 rows.push(counter(
-                    PID_PROCESSOR,
+                    pid_proc,
                     "predicted_slack_ms",
                     *t,
                     "slack",
                     *predicted_slack as f64 / crate::MS as f64,
                 ));
                 rows.push(instant(
-                    PID_PROCESSOR,
+                    pid_proc,
                     0,
                     "slack_estimate",
                     "decision",
@@ -199,7 +268,7 @@ pub fn chrome_trace(events: &[Event]) -> Json {
                 depth_after,
             } => {
                 rows.push(instant(
-                    PID_PROCESSOR,
+                    pid_proc,
                     0,
                     "merge",
                     "decision",
@@ -215,7 +284,7 @@ pub fn chrome_trace(events: &[Event]) -> Json {
                 admitted,
             } => {
                 rows.push(instant(
-                    PID_PROCESSOR,
+                    pid_proc,
                     0,
                     "preempt",
                     "decision",
@@ -233,7 +302,7 @@ pub fn chrome_trace(events: &[Event]) -> Json {
                         None => Json::Null,
                     },
                 );
-                rows.push(instant(PID_PROCESSOR, 0, "stall", "decision", *t, args));
+                rows.push(instant(pid_proc, 0, "stall", "decision", *t, args));
             }
             Event::NodeExec {
                 start,
@@ -244,7 +313,7 @@ pub fn chrome_trace(events: &[Event]) -> Json {
             } => {
                 let name = format!("n{} b={}", tpos, members.len());
                 rows.push(complete(
-                    PID_PROCESSOR,
+                    pid_proc,
                     0,
                     name,
                     "exec",
@@ -259,7 +328,7 @@ pub fn chrome_trace(events: &[Event]) -> Json {
                 ));
                 for &id in members {
                     rows.push(complete(
-                        PID_REQUESTS,
+                        pid_requests,
                         id,
                         format!("n{tpos}"),
                         "exec",
@@ -278,7 +347,7 @@ pub fn chrome_trace(events: &[Event]) -> Json {
                 if *queue_wait > 0 {
                     let arrival = t.saturating_sub(*latency);
                     rows.push(complete(
-                        PID_REQUESTS,
+                        pid_requests,
                         *req,
                         "queue".to_string(),
                         "wait",
@@ -288,7 +357,7 @@ pub fn chrome_trace(events: &[Event]) -> Json {
                     ));
                 }
                 rows.push(instant(
-                    PID_REQUESTS,
+                    pid_requests,
                     *req,
                     "release",
                     "lifecycle",
@@ -301,23 +370,7 @@ pub fn chrome_trace(events: &[Event]) -> Json {
         }
     }
 
-    rows.sort_by_key(|r| r.ts);
-
-    let mut trace_events = Vec::with_capacity(rows.len() + request_ids.len() + 4);
-    // metadata first: track names for the processor and every request
-    trace_events.push(metadata(PID_PROCESSOR, None, "process_name", "processor".into()));
-    trace_events.push(metadata(PID_PROCESSOR, Some(0), "thread_name", policy.clone()));
-    trace_events.push(metadata(PID_REQUESTS, None, "process_name", "requests".into()));
-    request_ids.sort_unstable();
-    request_ids.dedup();
-    for id in &request_ids {
-        trace_events.push(metadata(PID_REQUESTS, Some(*id), "thread_name", format!("req {id}")));
-    }
-    trace_events.extend(rows.into_iter().map(|r| r.json));
-
-    Json::obj()
-        .set("traceEvents", Json::Arr(trace_events))
-        .set("displayTimeUnit", "ms")
+    policy
 }
 
 /// Per-request compact timeline summary.
@@ -638,6 +691,60 @@ mod tests {
                 .collect();
             assert!(num.parse::<f64>().unwrap() >= 0.0);
         }
+    }
+
+    #[test]
+    fn chrome_trace_sharded_emits_one_processor_track_per_shard() {
+        let s0 = sample_events();
+        let s1 = vec![
+            Event::RunStart {
+                policy: "LazyB".into(),
+            },
+            Event::Arrival {
+                t: 100,
+                req: 2,
+                model: 0,
+                in_len: 1,
+                out_len: 1,
+            },
+            Event::NodeExec {
+                start: 100,
+                dur: 700,
+                tpos: 0,
+                members: vec![2],
+                padded: false,
+            },
+            Event::Release {
+                t: 800,
+                req: 2,
+                latency: 700,
+                queue_wait: 0,
+            },
+        ];
+        let text = chrome_trace_sharded(&[s0, s1]).render();
+        assert_valid_json(&text);
+        // one named processor track group per shard (pids 0 and 1)...
+        assert!(text.contains(r#"{"name":"shard 0"}"#));
+        assert!(text.contains(r#"{"name":"shard 1"}"#));
+        // ...and the shared request group at pid 2 names all three requests
+        assert!(text.contains(r#"{"name":"req 0"}"#));
+        assert!(text.contains(r#"{"name":"req 2"}"#));
+        // shard 1's exec slice lands on its own pid, its request slice on
+        // the shared request pid with the global id as tid
+        assert!(text.contains(r#""pid":1,"tid":0"#));
+        assert!(text.contains(r#""pid":2,"tid":2"#));
+    }
+
+    #[test]
+    fn chrome_trace_sharded_single_stream_matches_unsharded_layout() {
+        // with one stream the pids coincide with chrome_trace's layout;
+        // only the processor's process_name differs
+        let a = chrome_trace(&sample_events()).render();
+        let b = chrome_trace_sharded(&[sample_events()]).render();
+        assert_eq!(
+            a.replace(r#"{"name":"processor"}"#, r#"{"name":"shard 0"}"#),
+            b
+        );
     }
 
     #[test]

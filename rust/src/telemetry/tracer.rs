@@ -21,6 +21,8 @@
 //! server records only from its scheduler thread, so the mutex is
 //! uncontended.
 
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use super::event::Event;
@@ -52,30 +54,72 @@ pub fn noop() -> TracerRef {
     Arc::new(NoopTracer)
 }
 
-/// Buffers every event in memory for later export.
-#[derive(Debug, Default)]
+/// Buffers events in memory for later export.
+///
+/// [`RecordingTracer::new`] keeps everything (fine for bounded
+/// experiments); [`RecordingTracer::bounded`] keeps a ring of the most
+/// recent `capacity` events, dropping the oldest and counting the drops —
+/// the mode long `serve` runs need, where the event stream is unbounded
+/// but only the recent window is ever exported.
+#[derive(Debug)]
 pub struct RecordingTracer {
-    events: Mutex<Vec<Event>>,
+    events: Mutex<VecDeque<Event>>,
+    /// Ring capacity; `usize::MAX` means unbounded.
+    capacity: usize,
+    dropped: AtomicU64,
+}
+
+impl Default for RecordingTracer {
+    fn default() -> Self {
+        RecordingTracer {
+            events: Mutex::new(VecDeque::new()),
+            capacity: usize::MAX,
+            dropped: AtomicU64::new(0),
+        }
+    }
 }
 
 impl RecordingTracer {
-    /// New shared recording tracer (coerces to [`TracerRef`]).
+    /// New shared unbounded recording tracer (coerces to [`TracerRef`]).
     pub fn new() -> Arc<RecordingTracer> {
         Arc::new(RecordingTracer::default())
     }
 
-    /// Drain the recorded events (leaves the buffer empty).
-    pub fn take(&self) -> Vec<Event> {
-        std::mem::take(&mut *self.events.lock().unwrap())
+    /// New shared recording tracer that retains at most `capacity` events,
+    /// evicting the oldest once full (drop-oldest ring). Evictions are
+    /// tallied in [`RecordingTracer::dropped_events`].
+    pub fn bounded(capacity: usize) -> Arc<RecordingTracer> {
+        assert!(capacity > 0, "ring capacity must be positive");
+        Arc::new(RecordingTracer {
+            events: Mutex::new(VecDeque::with_capacity(capacity.min(1 << 20))),
+            capacity,
+            dropped: AtomicU64::new(0),
+        })
     }
 
-    /// Number of events recorded so far.
+    /// Drain the recorded events, oldest first (leaves the buffer empty;
+    /// the drop counter is preserved).
+    pub fn take(&self) -> Vec<Event> {
+        self.events.lock().unwrap().drain(..).collect()
+    }
+
+    /// Number of events currently buffered.
     pub fn len(&self) -> usize {
         self.events.lock().unwrap().len()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Events evicted from the ring so far (always 0 when unbounded).
+    pub fn dropped_events(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// The configured ring capacity (`None` when unbounded).
+    pub fn capacity(&self) -> Option<usize> {
+        (self.capacity != usize::MAX).then_some(self.capacity)
     }
 }
 
@@ -85,7 +129,12 @@ impl Tracer for RecordingTracer {
     }
 
     fn record(&self, ev: Event) {
-        self.events.lock().unwrap().push(ev);
+        let mut events = self.events.lock().unwrap();
+        if events.len() >= self.capacity {
+            events.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        events.push_back(ev);
     }
 }
 
@@ -129,5 +178,49 @@ mod tests {
         assert_eq!(evs[0].kind(), "arrival");
         assert_eq!(evs[1].kind(), "release");
         assert!(rec.is_empty());
+        assert_eq!(rec.dropped_events(), 0);
+        assert_eq!(rec.capacity(), None);
+    }
+
+    fn arrival(t: u64) -> Event {
+        Event::Arrival {
+            t,
+            req: t,
+            model: 0,
+            in_len: 1,
+            out_len: 1,
+        }
+    }
+
+    #[test]
+    fn bounded_ring_drops_oldest_and_counts() {
+        let rec = RecordingTracer::bounded(3);
+        assert_eq!(rec.capacity(), Some(3));
+        for t in 0..10 {
+            rec.record(arrival(t));
+        }
+        assert_eq!(rec.len(), 3);
+        assert_eq!(rec.dropped_events(), 7);
+        let evs = rec.take();
+        // the most recent window survives, oldest first
+        let ts: Vec<u64> = evs.iter().map(|e| e.timestamp()).collect();
+        assert_eq!(ts, vec![7, 8, 9]);
+        // draining resets the buffer but not the drop tally
+        assert!(rec.is_empty());
+        assert_eq!(rec.dropped_events(), 7);
+        rec.record(arrival(10));
+        assert_eq!(rec.len(), 1);
+        assert_eq!(rec.dropped_events(), 7);
+    }
+
+    #[test]
+    fn bounded_ring_below_capacity_drops_nothing() {
+        let rec = RecordingTracer::bounded(100);
+        for t in 0..5 {
+            rec.record(arrival(t));
+        }
+        assert_eq!(rec.len(), 5);
+        assert_eq!(rec.dropped_events(), 0);
+        assert_eq!(rec.take().len(), 5);
     }
 }

@@ -9,6 +9,7 @@
 
 pub mod cli;
 pub mod json;
+pub mod par;
 pub mod prng;
 pub mod proptest;
 pub mod stats;

@@ -1,0 +1,114 @@
+//! Deterministic fork/join parallelism on `std::thread::scope`.
+//!
+//! The vendored registry carries no `rayon`, and the measurement harness
+//! doesn't need one: every parallel site in this crate is a fixed list of
+//! independent, seeded computations (the N runs of an experiment, the
+//! points of a bench sweep). [`par_map`] fans those out across OS threads
+//! with a shared atomic work index and writes each result into the slot of
+//! its input — so the output order (and therefore every aggregate and
+//! every byte of JSON downstream) is identical to the serial path, only
+//! the wall-clock differs.
+
+use std::sync::Mutex;
+
+/// Worker count for parallel harness sections: `LB_THREADS` if set (a
+/// value of `1` forces the serial path), else the machine's available
+/// parallelism, else 1.
+pub fn threads() -> usize {
+    std::env::var("LB_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        })
+}
+
+/// `items.map(f)` preserving order, computed on [`threads()`] workers.
+pub fn par_map<T, R, F>(items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    par_map_threads(threads(), items, f)
+}
+
+/// [`par_map`] with an explicit worker count. `workers <= 1` runs the
+/// exact serial path (no threads spawned, no locking) — the byte-identity
+/// tests compare this against the threaded path directly.
+pub fn par_map_threads<T, R, F>(workers: usize, items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = items.len();
+    if workers <= 1 || n <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    // Each item is pulled by exactly one worker from the shared queue and
+    // its result written back into the slot of its input index:
+    // completion order cannot reorder the output.
+    let work: Vec<(usize, T)> = items.into_iter().enumerate().collect();
+    let work = Mutex::new(work.into_iter());
+    let slots: Mutex<Vec<Option<R>>> = Mutex::new((0..n).map(|_| None).collect());
+    let f = &f;
+    std::thread::scope(|s| {
+        for _ in 0..workers.min(n) {
+            s.spawn(|| loop {
+                let item = work.lock().unwrap().next();
+                let Some((i, item)) = item else { return };
+                let r = f(item);
+                slots.lock().unwrap()[i] = Some(r);
+            });
+        }
+    });
+    slots
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|r| r.expect("worker died before filling its slot"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_input_order() {
+        let out = par_map_threads(4, (0..100).collect(), |i: i32| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn matches_serial_path_exactly() {
+        let items: Vec<u64> = (0..37).collect();
+        let serial = par_map_threads(1, items.clone(), |i| i.wrapping_mul(0x9E37));
+        let parallel = par_map_threads(8, items, |i| i.wrapping_mul(0x9E37));
+        assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn handles_empty_and_single() {
+        let empty: Vec<i32> = par_map_threads(4, Vec::<i32>::new(), |i| i);
+        assert!(empty.is_empty());
+        assert_eq!(par_map_threads(4, vec![7], |i: i32| i + 1), vec![8]);
+    }
+
+    #[test]
+    fn more_workers_than_items() {
+        assert_eq!(
+            par_map_threads(16, vec![1, 2, 3], |i: i32| i * 10),
+            vec![10, 20, 30]
+        );
+    }
+
+    #[test]
+    fn threads_is_at_least_one() {
+        assert!(threads() >= 1);
+    }
+}

@@ -28,6 +28,16 @@ if [[ "${1:-}" != "--fast" ]]; then
     # (tiny trace; the JSON path carries the merged histograms)
     run env LB_BENCH_RUNS=2 LB_BENCH_SECS=0.2 \
         cargo bench --bench perf_shard -- --shards 2 --json
+    # smoke: cross-shard work stealing end-to-end; the aggregate JSON must
+    # be NaN-free (empty-pool and NaN-sort regressions both surface here)
+    echo "== perf_shard --steal none,slack-aware --json (NaN gate)"
+    steal_json=$(env LB_BENCH_RUNS=2 LB_BENCH_SECS=0.2 \
+        cargo bench --bench perf_shard -- --shards 4 --steal none,slack-aware --json)
+    if printf '%s\n' "$steal_json" | grep -qiw nan; then
+        echo "ci: NaN field in perf_shard --steal JSON output" >&2
+        printf '%s\n' "$steal_json" | grep -iw nan >&2
+        exit 1
+    fi
 fi
 
 echo "ci: OK"

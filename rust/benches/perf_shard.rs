@@ -10,11 +10,13 @@
 //! Flags: `--shards 1,2,4,8` (comma list or single value),
 //! `--dispatch rr|jsq|p2c`, `--rate <req/s>`, `--json` (full aggregate
 //! statistics per point, including the queue-wait and batch-size
-//! histograms).
+//! histograms). `--steal none,slack-aware` (comma list) adds a steal-policy
+//! comparison at 4 shards under a skewed GNMT workload, with
+//! `--steal-rate <req/s>` controlling its offered load.
 
 use lazybatching::exp::{self, ExpConfig, JsonReport, PolicyCfg};
 use lazybatching::model::Workload;
-use lazybatching::sim::DispatchPolicy;
+use lazybatching::sim::{DispatchPolicy, StealPolicy};
 use lazybatching::util::cli::Args;
 use lazybatching::util::table::{f3, Table};
 
@@ -102,10 +104,58 @@ fn main() {
                 .set("scaling_vs_baseline", scaling),
         );
     }
+    // --steal none,slack-aware: compare steal policies at 4 shards under a
+    // skewed GNMT load. Round-robin dispatch ignores the highly variable
+    // sequence lengths, so shards drift out of balance and the stealer has
+    // real work to move.
+    let steal_list: Vec<StealPolicy> = match args.get("steal") {
+        None => Vec::new(),
+        Some(s) => s
+            .split(',')
+            .map(|x| {
+                StealPolicy::from_name(x.trim())
+                    .expect("--steal: expected none, idle-pull or slack-aware")
+            })
+            .collect(),
+    };
+    let mut st = Table::new(vec!["steal", "tput (req/s)", "lat_ms", "p99_ms", "viol"]);
+    let steal_rate = args.get_f64("steal-rate", 500.0).expect("--steal-rate");
+    for &steal in &steal_list {
+        let cfg = ExpConfig {
+            workload: Workload::Gnmt,
+            rate: steal_rate,
+            shards: 4,
+            dispatch: DispatchPolicy::RoundRobin,
+            steal,
+            ..base.clone()
+        };
+        let agg = exp::run(&cfg);
+        st.row(vec![
+            steal.name().to_string(),
+            f3(agg.mean_throughput()),
+            f3(agg.mean_latency_ms()),
+            f3(agg.p99_ms()),
+            f3(agg.violation_rate(cfg.sla)),
+        ]);
+        report.push(
+            agg.to_json(cfg.sla)
+                .set("workload", cfg.workload.name())
+                .set("rate", steal_rate)
+                .set("policy", cfg.policy.name())
+                .set("shards", cfg.shards)
+                .set("dispatch", cfg.dispatch.name())
+                .set("steal", steal.name()),
+        );
+    }
+
     if report.enabled() {
         report.print();
     } else {
         t.print();
         println!("\nexpected: >= 3x aggregate throughput at 4 shards vs 1 under saturation");
+        if !steal_list.is_empty() {
+            println!("\nsteal policies @ {steal_rate} req/s (GNMT/LazyB, 4 shards, rr dispatch)");
+            st.print();
+        }
     }
 }

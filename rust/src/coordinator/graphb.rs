@@ -163,6 +163,21 @@ impl Batcher for GraphBatching {
         }
     }
 
+    fn revocable(&self) -> Vec<ReqId> {
+        // only the waiting queue — an issued batch runs uninterrupted
+        self.queue.iter().copied().collect()
+    }
+
+    fn try_revoke(&mut self, id: ReqId) -> bool {
+        match self.queue.iter().position(|&q| q == id) {
+            Some(pos) => {
+                self.queue.remove(pos);
+                true
+            }
+            None => false,
+        }
+    }
+
     fn stats(&self) -> PolicyStats {
         self.stats.clone()
     }
@@ -317,5 +332,20 @@ mod tests {
         assert!(matches!(g2.next_action(0, &reqs2), Action::Execute(_)));
         assert_eq!(g2.stats().extra_counter("batch_full"), 1);
         assert_eq!(g2.stats().extra_counter("window_expired"), 0);
+    }
+
+    #[test]
+    fn revoke_spares_the_issued_batch() {
+        let (mut g, mut reqs) = gb(95, 2);
+        for i in 0..3 {
+            reqs.insert(spec(i, 0, 5, 5));
+            g.on_arrival(0, &reqs, i);
+        }
+        // max_batch = 2: requests 0 and 1 issue, request 2 stays queued
+        assert!(matches!(g.next_action(0, &reqs), Action::Execute(_)));
+        assert_eq!(g.revocable(), vec![2]);
+        assert!(!g.try_revoke(0), "issued batch member must not be revocable");
+        assert!(g.try_revoke(2));
+        assert!(g.revocable().is_empty());
     }
 }

@@ -338,6 +338,21 @@ impl Batcher for LazyBatching {
         }
     }
 
+    fn revocable(&self) -> Vec<ReqId> {
+        // only the InfQ backlog — anything in the batch table has issued
+        self.pending.iter().copied().collect()
+    }
+
+    fn try_revoke(&mut self, id: ReqId) -> bool {
+        match self.pending.iter().position(|&q| q == id) {
+            Some(pos) => {
+                self.pending.remove(pos);
+                true
+            }
+            None => false,
+        }
+    }
+
     fn stats(&self) -> PolicyStats {
         self.stats.clone()
     }
@@ -539,5 +554,24 @@ mod tests {
                 ..
             }
         )));
+    }
+
+    #[test]
+    fn revoke_only_touches_the_pending_queue() {
+        // Tight SLA keeps the second arrival pending behind the active batch.
+        let mut lb =
+            LazyBatching::with_defaults(table(Workload::Gnmt), 12 * MS, SlackMode::Conservative);
+        let mut reqs = Reqs::default();
+        reqs.insert(RequestSpec { id: 0, arrival: 0, in_len: 20, out_len: 20, model_idx: 0 });
+        lb.on_arrival(0, &reqs, 0);
+        assert!(matches!(lb.next_action(0, &reqs), Action::Execute(_)));
+        reqs.insert(RequestSpec { id: 1, arrival: MS, in_len: 20, out_len: 20, model_idx: 0 });
+        lb.on_arrival(MS, &reqs, 1);
+        assert!(matches!(lb.next_action(MS, &reqs), Action::Execute(_)));
+        assert_eq!(lb.revocable(), vec![1], "only the denied pending request");
+        assert!(!lb.try_revoke(0), "in-flight request must not be revocable");
+        assert!(lb.try_revoke(1));
+        assert!(lb.revocable().is_empty());
+        assert!(!lb.try_revoke(1));
     }
 }

@@ -32,4 +32,4 @@ pub use policy::{
     Action, Batcher, Completion, Exec, PolicyStats, ReqId, ReqState, Reqs, Transition,
 };
 pub use serial::Serial;
-pub use slack::{SlackMode, SlackPredictor};
+pub use slack::{queued_slack, SlackMode, SlackPredictor};

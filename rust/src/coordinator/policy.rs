@@ -219,6 +219,24 @@ pub trait Batcher {
     /// Called whenever the processor is idle: decide the next action.
     fn next_action(&mut self, now: Nanos, reqs: &Reqs) -> Action;
 
+    /// Queued request ids the policy is willing to give back for
+    /// cross-shard migration, in FIFO (arrival) order. Only requests that
+    /// were never issued and are not part of any formed batch may be
+    /// listed. The default — an empty list — makes a policy opaque to
+    /// work stealing.
+    fn revocable(&self) -> Vec<ReqId> {
+        Vec::new()
+    }
+
+    /// Remove `id` from the policy's queue so it can migrate to another
+    /// shard. Must return `true` only if `id` was revocable (i.e. listed
+    /// by [`Batcher::revocable`]) and the policy has forgotten it
+    /// entirely — the request re-arrives on a different policy instance
+    /// and must never be named by this one again.
+    fn try_revoke(&mut self, _id: ReqId) -> bool {
+        false
+    }
+
     /// Scheduling statistics accumulated so far.
     fn stats(&self) -> PolicyStats {
         PolicyStats::default()

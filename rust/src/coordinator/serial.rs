@@ -84,6 +84,20 @@ impl Batcher for Serial {
         }
     }
 
+    fn revocable(&self) -> Vec<ReqId> {
+        self.queue.iter().copied().collect()
+    }
+
+    fn try_revoke(&mut self, id: ReqId) -> bool {
+        match self.queue.iter().position(|&q| q == id) {
+            Some(pos) => {
+                self.queue.remove(pos);
+                true
+            }
+            None => false,
+        }
+    }
+
     fn stats(&self) -> PolicyStats {
         self.stats.clone()
     }
@@ -151,5 +165,22 @@ mod tests {
         let mut s = Serial::new();
         let reqs = Reqs::default();
         assert_eq!(s.next_action(0, &reqs), Action::Sleep { until: None });
+    }
+
+    #[test]
+    fn revoke_removes_only_queued_requests() {
+        let mut s = Serial::new();
+        let mut reqs = Reqs::default();
+        for i in 0..3 {
+            reqs.insert(spec(i));
+            s.on_arrival(0, &reqs, i);
+        }
+        // request 0 becomes active — it is no longer revocable
+        assert!(matches!(s.next_action(0, &reqs), Action::Execute(_)));
+        assert_eq!(s.revocable(), vec![1, 2]);
+        assert!(!s.try_revoke(0), "active request must not be revocable");
+        assert!(s.try_revoke(1));
+        assert!(!s.try_revoke(1), "double revoke must fail");
+        assert_eq!(s.revocable(), vec![2]);
     }
 }

@@ -24,7 +24,28 @@ use super::batch_table::BatchTable;
 use super::policy::{ReqId, Reqs};
 use crate::model::graph::NodeClass;
 use crate::model::LatencyTable;
+use crate::traffic::RequestSpec;
 use crate::Nanos;
+
+/// Predicted remaining slack of a *queued* (never-issued) request: the
+/// conservative Eq. 2 estimate from graph node 0 — `SLA − waited − Σ
+/// single-batch exec time`. Negative means the request is already
+/// predicted to blow its SLA even if it ran alone starting now.
+///
+/// This is the ordering key of slack-aware work stealing
+/// ([`crate::sim::StealPolicy`]): a free-standing function because the
+/// steal pass ranks victims' queues without owning a [`SlackPredictor`].
+pub fn queued_slack(
+    table: &LatencyTable,
+    sla_target: Nanos,
+    dec_timesteps: usize,
+    now: Nanos,
+    spec: &RequestSpec,
+) -> i64 {
+    let elapsed = now.saturating_sub(spec.arrival);
+    let remaining = table.remaining_exec_time(0, 0, spec.in_len, dec_timesteps);
+    sla_target as i64 - elapsed as i64 - remaining as i64
+}
 
 /// Which estimator the predictor runs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -512,6 +533,26 @@ mod tests {
         let bt = BatchTable::new();
         let s = p.min_slack_if_admitted(0, &reqs, &bt, &[]);
         assert_eq!(s, 100 * MS as i64);
+    }
+
+    #[test]
+    fn queued_slack_orders_by_waited_time_and_length() {
+        let (t, _p) = setup(Workload::Gnmt, 100, SlackMode::Conservative);
+        let now = 10 * MS;
+        // same length, earlier arrival → waited longer → less slack
+        let old = req(0, 0, 10, 10);
+        let fresh = req(1, 8 * MS, 10, 10);
+        let s_old = queued_slack(&t, 100 * MS, 32, now, &old);
+        let s_fresh = queued_slack(&t, 100 * MS, 32, now, &fresh);
+        assert!(s_old < s_fresh, "{s_old} !< {s_fresh}");
+        assert_eq!(s_fresh - s_old, 8 * MS as i64);
+        // longer input → more remaining work → less slack
+        let long = req(2, 8 * MS, 40, 10);
+        let s_long = queued_slack(&t, 100 * MS, 32, now, &long);
+        assert!(s_long < s_fresh, "{s_long} !< {s_fresh}");
+        // a hopeless SLA goes negative
+        let doomed = queued_slack(&t, MS / 10, 32, now, &old);
+        assert!(doomed < 0);
     }
 
     #[test]

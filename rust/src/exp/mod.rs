@@ -21,7 +21,9 @@ use crate::model::{LatencyTable, Workload};
 use crate::npu::gpu::GpuModel;
 use crate::npu::systolic::SystolicModel;
 use crate::npu::CostModel;
-use crate::sim::{DispatchPolicy, RunResult, ShardRun, ShardedEngine, SimConfig, SimEngine};
+use crate::sim::{
+    DispatchPolicy, RunResult, ShardRun, ShardedEngine, SimConfig, SimEngine, StealPolicy,
+};
 use crate::telemetry::TracerRef;
 use crate::traffic::{LangPair, Trace};
 use crate::util::par;
@@ -82,6 +84,10 @@ pub struct ExpConfig {
     /// How arrivals are routed across shards when `shards > 1`. P2C's
     /// internal seed is re-salted per run seed.
     pub dispatch: DispatchPolicy,
+    /// Cross-shard work stealing for queued requests (`shards > 1` only);
+    /// [`StealPolicy::None`] keeps sharded runs byte-identical to the
+    /// pre-steal engine.
+    pub steal: StealPolicy,
 }
 
 impl Default for ExpConfig {
@@ -100,6 +106,7 @@ impl Default for ExpConfig {
             lang: LangPair::EnDe,
             shards: 1,
             dispatch: DispatchPolicy::JoinShortestQueue,
+            steal: StealPolicy::None,
         }
     }
 }
@@ -139,9 +146,12 @@ pub fn make_table(w: Workload, device: DeviceKind, max_batch: usize) -> Arc<Late
     Arc::new(LatencyTable::profile(graph, dev.as_ref(), max_batch))
 }
 
-/// Instantiate the policy named by `cfg` over `table`.
-pub fn make_policy(cfg: &ExpConfig, table: Arc<LatencyTable>) -> Box<dyn Batcher> {
-    let dec = if cfg.dec_timesteps == 0 {
+/// The decoder-unroll bound a configuration actually runs with: `0`
+/// resolves to the paper default (32 for dynamic graphs, 1 otherwise).
+/// Shared by [`make_policy`] and the sharded engine's slack-aware steal
+/// ordering, so the thief prices queued work exactly like admission does.
+pub fn resolved_dec_timesteps(cfg: &ExpConfig, table: &LatencyTable) -> usize {
+    if cfg.dec_timesteps == 0 {
         if table.graph.is_dynamic() {
             32
         } else {
@@ -149,7 +159,12 @@ pub fn make_policy(cfg: &ExpConfig, table: Arc<LatencyTable>) -> Box<dyn Batcher
         }
     } else {
         cfg.dec_timesteps
-    };
+    }
+}
+
+/// Instantiate the policy named by `cfg` over `table`.
+pub fn make_policy(cfg: &ExpConfig, table: Arc<LatencyTable>) -> Box<dyn Batcher> {
+    let dec = resolved_dec_timesteps(cfg, table.as_ref());
     match cfg.policy {
         PolicyCfg::Serial => Box::new(crate::coordinator::Serial::new()),
         PolicyCfg::GraphB(w_ms) => Box::new(GraphBatching::new(
@@ -216,7 +231,8 @@ pub fn run_sharded_traced(
         sim_config(cfg),
         cfg.shards.max(1),
         cfg.dispatch.reseeded(seed),
-    );
+    )
+    .with_steal(cfg.steal, cfg.sla, resolved_dec_timesteps(cfg, table.as_ref()));
     engine.run_traced(&trace, |_| make_policy(cfg, table.clone()), tracers)
 }
 
@@ -412,6 +428,31 @@ mod tests {
         let b = run(&cfg);
         assert_eq!(a.pooled_ns, b.pooled_ns);
         assert_eq!(a.run_p99_ms, b.run_p99_ms);
+    }
+
+    #[test]
+    fn steal_runs_are_deterministic_across_workers() {
+        // steal-path coverage for the LB_THREADS fan-out: parallelism is
+        // only across seeds, so stealing inside each run must not cost a
+        // byte of reproducibility
+        let cfg = ExpConfig {
+            workload: Workload::Gnmt,
+            policy: PolicyCfg::Lazy,
+            rate: 600.0,
+            duration: SEC,
+            runs: 3,
+            shards: 4,
+            dispatch: DispatchPolicy::RoundRobin,
+            steal: StealPolicy::SlackAware,
+            ..ExpConfig::default()
+        };
+        let serial = run_threaded(&cfg, 1);
+        let threaded = run_threaded(&cfg, 4);
+        assert_eq!(serial.pooled_ns, threaded.pooled_ns);
+        assert_eq!(
+            serial.to_json(cfg.sla).render(),
+            threaded.to_json(cfg.sla).render()
+        );
     }
 
     #[test]

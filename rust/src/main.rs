@@ -30,7 +30,7 @@ use lazybatching::model::{LatencyTable, Workload, WMT_MEAN_IN, WMT_MEAN_OUT};
 use lazybatching::npu::systolic::SystolicModel;
 #[cfg(feature = "real")]
 use lazybatching::server::{self, ServeConfig, ServePolicy, ServeRequest};
-use lazybatching::sim::DispatchPolicy;
+use lazybatching::sim::{DispatchPolicy, StealPolicy};
 use lazybatching::telemetry::{perfetto, registry::ns_to_ms, RecordingTracer, TracerRef};
 use lazybatching::traffic::PoissonArrivals;
 use lazybatching::util::cli::Args;
@@ -72,11 +72,14 @@ fn print_help() {
          simulate   --workload W --policy <serial|graphb|lazy|oracle> [--btw MS]\n\
          \x20          [--rate R] [--sla MS] [--runs N] [--duration S] [--gpu] [--json]\n\
          \x20          [--shards N] [--dispatch <rr|jsq|p2c>]\n\
+         \x20          [--steal <none|idle-pull|slack-aware>]\n\
          sweep      --workload W [--rates a,b,c] [--sla MS] [--runs N]\n\
          \x20          [--shards N] [--dispatch <rr|jsq|p2c>]\n\
+         \x20          [--steal <none|idle-pull|slack-aware>]\n\
          trace      --workload W --policy P [--rate R] [--sla MS] [--duration S]\n\
          \x20          [--seed N] [--out FILE.json] [--limit N] [--trace-cap N]\n\
          \x20          [--shards N] [--dispatch <rr|jsq|p2c>]\n\
+         \x20          [--steal <none|idle-pull|slack-aware>]\n\
          \x20          (Perfetto/chrome://tracing export + per-request timelines;\n\
          \x20           with --shards > 1, one processor track per shard)\n\
          serve      [--artifacts DIR] [--rate R] [--requests N] [--sla MS]\n\
@@ -100,6 +103,13 @@ fn parse_dispatch(args: &Args) -> Result<DispatchPolicy> {
     let name = args.get_or("dispatch", "jsq");
     DispatchPolicy::from_name(name)
         .ok_or_else(|| anyhow::anyhow!("unknown dispatch policy '{name}' (expected rr, jsq, p2c)"))
+}
+
+fn parse_steal(args: &Args) -> Result<StealPolicy> {
+    let name = args.get_or("steal", "none");
+    StealPolicy::from_name(name).ok_or_else(|| {
+        anyhow::anyhow!("unknown steal policy '{name}' (expected none, idle-pull, slack-aware)")
+    })
 }
 
 fn parse_workload(args: &Args) -> Result<Workload> {
@@ -129,6 +139,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         },
         shards: args.get_usize("shards", 1)?,
         dispatch: parse_dispatch(args)?,
+        steal: parse_steal(args)?,
         ..ExpConfig::default()
     };
     let agg = exp::run(&cfg);
@@ -141,6 +152,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             .set("rate", cfg.rate)
             .set("shards", cfg.shards)
             .set("dispatch", cfg.dispatch.name())
+            .set("steal", cfg.steal.name())
             .set("throughput", agg.mean_throughput());
         println!("{}", j.render());
     } else {
@@ -166,7 +178,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         if cfg.shards > 1 {
             t.row(vec![
                 "shards".to_string(),
-                format!("{} ({})", cfg.shards, cfg.dispatch.name()),
+                format!("{} ({}, steal {})", cfg.shards, cfg.dispatch.name(), cfg.steal.name()),
             ]);
         }
         t.print();
@@ -189,6 +201,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             duration: SEC,
             shards: args.get_usize("shards", 1)?,
             dispatch: parse_dispatch(args)?,
+            steal: parse_steal(args)?,
             ..ExpConfig::default()
         };
         let mut policies = vec![PolicyCfg::Serial, PolicyCfg::Lazy, PolicyCfg::Oracle];
@@ -226,6 +239,7 @@ fn cmd_trace(args: &Args) -> Result<()> {
         max_batch: args.get_usize("max-batch", 64)?,
         shards: args.get_usize("shards", 1)?,
         dispatch: parse_dispatch(args)?,
+        steal: parse_steal(args)?,
         ..ExpConfig::default()
     };
     let out = args.get_or("out", "trace.json").to_string();
@@ -247,7 +261,12 @@ fn cmd_trace(args: &Args) -> Result<()> {
         let streams: Vec<_> = recs.iter().map(|r| r.take()).collect();
         let dropped: u64 = recs.iter().map(|r| r.dropped_events()).sum();
         std::fs::write(&out, perfetto::chrome_trace_sharded(&streams).render())?;
-        println!("{} shards via {} dispatch:", cfg.shards, cfg.dispatch.name());
+        println!(
+            "{} shards via {} dispatch (steal {}):",
+            cfg.shards,
+            cfg.dispatch.name(),
+            cfg.steal.name()
+        );
         let counts = run.per_shard_requests();
         for (i, r) in run.per_shard.iter().enumerate() {
             println!(
@@ -255,6 +274,9 @@ fn cmd_trace(args: &Args) -> Result<()> {
                 counts[i],
                 r.utilization() * 100.0
             );
+        }
+        if !run.migrations.is_empty() {
+            println!("  {} cross-shard migrations ({})", run.migrations.len(), cfg.steal.name());
         }
         // merged stream (global time order) for the summaries below
         let mut events: Vec<_> = streams.into_iter().flatten().collect();

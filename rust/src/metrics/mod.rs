@@ -61,7 +61,9 @@ impl Aggregate {
             agg.batch_size_hist.merge(&r.batch_size_hist);
             r.stats.fold_into(&mut agg.stats);
         }
-        agg.pooled_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp: a NaN latency (e.g. from a degenerate run) must sort,
+        // not panic the whole aggregation like partial_cmp().unwrap() did
+        agg.pooled_ms.sort_by(f64::total_cmp);
         agg.pooled_ns.sort_unstable();
         agg
     }
@@ -72,9 +74,13 @@ impl Aggregate {
     }
 
     /// 25th/75th percentile of per-run mean latency (Fig. 12 error bars).
+    /// An aggregate with no runs reports (0.0, 0.0) rather than panicking.
     pub fn latency_p25_p75(&self) -> (f64, f64) {
+        if self.run_mean_latency_ms.is_empty() {
+            return (0.0, 0.0);
+        }
         let mut v = self.run_mean_latency_ms.clone();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v.sort_by(f64::total_cmp);
         (
             stats::percentile_sorted(&v, 25.0),
             stats::percentile_sorted(&v, 75.0),
@@ -86,8 +92,11 @@ impl Aggregate {
     }
 
     pub fn throughput_p25_p75(&self) -> (f64, f64) {
+        if self.run_throughput.is_empty() {
+            return (0.0, 0.0);
+        }
         let mut v = self.run_throughput.clone();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v.sort_by(f64::total_cmp);
         (
             stats::percentile_sorted(&v, 25.0),
             stats::percentile_sorted(&v, 75.0),
@@ -285,6 +294,43 @@ mod tests {
         ] {
             assert!(text.contains(&format!("\"{key}\"")), "missing {key}: {text}");
         }
+    }
+
+    #[test]
+    fn empty_aggregate_renders_without_nan() {
+        // regression: percentile_sorted asserts on empty input, so an
+        // Aggregate over zero runs used to panic in to_json via the
+        // p25/p75 helpers; now every statistic degrades to 0.0
+        let a = Aggregate::from_runs(&[]);
+        assert_eq!(a.latency_p25_p75(), (0.0, 0.0));
+        assert_eq!(a.throughput_p25_p75(), (0.0, 0.0));
+        assert_eq!(a.p99_ms(), 0.0);
+        assert_eq!(a.violation_rate(MS), 0.0);
+        let text = a.to_json(40 * MS).render();
+        assert!(!text.to_lowercase().contains("nan"), "{text}");
+    }
+
+    #[test]
+    fn zero_request_run_aggregates_to_zeros() {
+        let a = Aggregate::from_runs(&[fake_run(&[])]);
+        assert_eq!(a.mean_latency_ms(), 0.0);
+        assert_eq!(a.p99_ms(), 0.0);
+        assert_eq!(a.violation_rate(MS), 0.0);
+        let text = a.to_json(40 * MS).render();
+        assert!(!text.to_lowercase().contains("nan"), "{text}");
+    }
+
+    #[test]
+    fn nan_run_mean_sorts_instead_of_panicking() {
+        // regression: the error-bar helpers sorted with
+        // partial_cmp().unwrap(), which aborts on the first NaN
+        let mut a = Aggregate::from_runs(&[fake_run(&[1.0, 2.0])]);
+        a.run_mean_latency_ms.push(f64::NAN);
+        a.run_throughput.push(f64::NAN);
+        let (lo, _) = a.latency_p25_p75();
+        assert!(lo.is_finite());
+        let (tlo, _) = a.throughput_p25_p75();
+        assert!(tlo.is_finite());
     }
 
     #[test]

@@ -9,10 +9,11 @@
 //!
 //! [`engine`] simulates one NPU; [`shard`] scales the same event loop to N
 //! NPUs behind a shared admission front-end with pluggable dispatch
-//! (round-robin / join-shortest-queue / power-of-two-choices).
+//! (round-robin / join-shortest-queue / power-of-two-choices) and
+//! optional cross-shard work stealing ([`StealPolicy`]).
 
 pub mod engine;
 pub mod shard;
 
 pub use engine::{RunResult, SimConfig, SimEngine};
-pub use shard::{merge_runs, DispatchPolicy, ShardRun, ShardedEngine};
+pub use shard::{merge_runs, DispatchPolicy, Migration, ShardRun, ShardedEngine, StealPolicy};

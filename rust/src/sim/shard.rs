@@ -35,11 +35,12 @@ use std::sync::{Arc, Mutex};
 use crate::coordinator::policy::{
     Action, Batcher, Completion, Exec, PolicyStats, ReqId, Reqs,
 };
+use crate::coordinator::{queued_slack, SlackPredictor};
 use crate::sim::engine::{RunResult, SimEngine};
 use crate::telemetry::{self, Event, Histogram, Tracer, TracerRef};
 use crate::traffic::{RequestSpec, Trace};
 use crate::util::Prng;
-use crate::Nanos;
+use crate::{Nanos, MS};
 
 /// How the admission front-end routes an arriving request to a shard.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -87,10 +88,71 @@ impl DispatchPolicy {
     }
 }
 
-/// Per-run dispatcher state (rotation counter / RNG).
+/// When (and what) an idle shard steals from a loaded neighbor's queue.
+///
+/// Stealing moves only *queued* requests — ones their policy never issued
+/// and holds outside any formed batch ([`Batcher::revocable`]) — so no
+/// in-flight execution state migrates. The arrival-time routing decision
+/// is thereby revisited right up to the moment a request first touches a
+/// processor (Symphony-style deferred placement).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StealPolicy {
+    /// Never steal. Sharded runs stay byte-identical to the pre-steal
+    /// engine (pinned by a test below).
+    #[default]
+    None,
+    /// A fully drained shard pulls the FIFO-head half of the deepest
+    /// revocable queue.
+    IdlePull,
+    /// Like `IdlePull`, but steals the queued requests with the *least*
+    /// predicted remaining slack (Eq. 2 from graph node 0) — the ones the
+    /// loaded shard is most likely to push past their SLA.
+    SlackAware,
+}
+
+impl StealPolicy {
+    /// Parse a CLI name (`none` / `idle-pull` / `slack-aware`).
+    pub fn from_name(name: &str) -> Option<StealPolicy> {
+        match name {
+            "none" | "off" => Some(StealPolicy::None),
+            "idle-pull" | "idle_pull" | "idle" => Some(StealPolicy::IdlePull),
+            "slack-aware" | "slack_aware" | "slack" => Some(StealPolicy::SlackAware),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            StealPolicy::None => "none",
+            StealPolicy::IdlePull => "idle-pull",
+            StealPolicy::SlackAware => "slack-aware",
+        }
+    }
+}
+
+/// One cross-shard steal performed during a run (global ids).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Migration {
+    /// Global (trace) id of the stolen request.
+    pub req: ReqId,
+    /// Shard whose queue it was stolen from.
+    pub from: usize,
+    /// Shard that pulled (and re-admitted) it.
+    pub to: usize,
+    /// Steal instant, global virtual time.
+    pub t: Nanos,
+    /// Predicted remaining slack at steal time (the slack-aware sort key).
+    pub slack: i64,
+}
+
+/// Per-run dispatcher state (rotation counters / RNG).
 struct Dispatcher {
     policy: DispatchPolicy,
     rr_next: usize,
+    /// Tie-break rotation, advanced on every pick: exact load ties (idle
+    /// fleet, low-rate regimes) spread across shards instead of all
+    /// resolving to the lowest index.
+    tie_rot: usize,
     rng: Prng,
 }
 
@@ -103,6 +165,7 @@ impl Dispatcher {
         Dispatcher {
             policy,
             rr_next: 0,
+            tie_rot: 0,
             rng: Prng::new(seed ^ 0x5AD5_D15B),
         }
     }
@@ -120,7 +183,15 @@ impl Dispatcher {
                 s
             }
             DispatchPolicy::JoinShortestQueue => {
-                (0..n).min_by_key(|&i| (key(i), i)).unwrap()
+                // scan from a rotating start: a unique minimum wins no
+                // matter where the scan starts, while exact ties resolve
+                // to a different shard each pick (deterministically)
+                let start = self.tie_rot % n;
+                self.tie_rot = self.tie_rot.wrapping_add(1);
+                (0..n)
+                    .map(|off| (start + off) % n)
+                    .min_by_key(|&i| key(i))
+                    .unwrap()
             }
             DispatchPolicy::P2C { .. } => {
                 if n == 1 {
@@ -131,11 +202,20 @@ impl Dispatcher {
                 if b >= a {
                     b += 1;
                 }
-                // prefer the less-loaded choice; stable tie-break on index
-                if (key(b), b) < (key(a), a) {
+                let (ka, kb) = (key(a), key(b));
+                if kb < ka {
                     b
-                } else {
+                } else if ka < kb {
                     a
+                } else {
+                    // exact tie: alternate between the sampled pair
+                    // instead of always favoring the lower index
+                    self.tie_rot = self.tie_rot.wrapping_add(1);
+                    if self.tie_rot & 1 == 0 {
+                        a.min(b)
+                    } else {
+                        a.max(b)
+                    }
                 }
             }
         }
@@ -175,7 +255,9 @@ impl Tracer for RemapTracer {
             let map = self.map.lock().unwrap();
             let g = |id: &mut ReqId| *id = map[*id as usize];
             match &mut ev {
-                Event::Arrival { req, .. } | Event::Release { req, .. } => g(req),
+                Event::Arrival { req, .. }
+                | Event::Release { req, .. }
+                | Event::Migrate { req, .. } => g(req),
                 Event::Admitted { reqs, .. } | Event::SlackEstimate { reqs, .. } => {
                     reqs.iter_mut().for_each(g)
                 }
@@ -215,6 +297,11 @@ pub(crate) struct ShardCore<'e> {
     timer: Option<Nanos>,
     now: Nanos,
     released: usize,
+    /// Local slots tombstoned by a steal: still in `globals`/`reqs` (ids
+    /// are dense) but no longer live on this shard.
+    revoked: usize,
+    stolen_in: u64,
+    stolen_out: u64,
     latencies: Vec<(ReqId, Nanos)>, // local ids until `finish`
     busy_total: Nanos,
     node_execs: u64,
@@ -244,6 +331,9 @@ impl<'e> ShardCore<'e> {
             timer: None,
             now: 0,
             released: 0,
+            revoked: 0,
+            stolen_in: 0,
+            stolen_out: 0,
             latencies: Vec::new(),
             busy_total: 0,
             node_execs: 0,
@@ -254,9 +344,10 @@ impl<'e> ShardCore<'e> {
     }
 
     /// Requests injected but not yet released (the dispatcher's "queue
-    /// depth", counting the one on the processor).
+    /// depth", counting the one on the processor). Slots stolen away by
+    /// the steal pass are no longer this shard's work.
     pub(crate) fn in_flight(&self) -> usize {
-        self.globals.len() - self.released
+        self.globals.len() - self.released - self.revoked
     }
 
     /// When the in-flight node execution completes, if any (the
@@ -350,6 +441,68 @@ impl<'e> ShardCore<'e> {
         self.policy.on_timer(t, &self.reqs);
     }
 
+    /// Queued (never-issued) local ids the policy would surrender to a
+    /// thief, FIFO order.
+    fn revocable(&self) -> Vec<ReqId> {
+        self.policy.revocable()
+    }
+
+    /// Remove a queued request for migration. Returns its spec — global
+    /// id restored, original arrival preserved — or `None` if the policy
+    /// refuses (already issued, or formed into a batch since
+    /// [`ShardCore::revocable`] was sampled).
+    fn revoke(&mut self, local: ReqId) -> Option<RequestSpec> {
+        {
+            let st = self.reqs.get(local);
+            if st.released || st.done || st.first_issue.is_some() {
+                return None;
+            }
+        }
+        if !self.policy.try_revoke(local) {
+            return None;
+        }
+        // tombstone the local slot: ids are dense so the state stays, but
+        // it must never count as live or be released here again
+        let global = self.globals[local as usize];
+        let st = self.reqs.get_mut(local);
+        st.done = true;
+        st.released = true;
+        let spec = RequestSpec { id: global, ..st.spec };
+        self.revoked += 1;
+        self.stolen_out += 1;
+        Some(spec)
+    }
+
+    /// Re-admit a request stolen from shard `from`: it gets a fresh local
+    /// id here, keeping its *original* arrival time so latency and slack
+    /// keep charging the wait already served on the victim shard.
+    fn inject_migrated(
+        &mut self,
+        spec: RequestSpec,
+        now: Nanos,
+        from: usize,
+        to: usize,
+        slack: i64,
+    ) {
+        self.check_clock(now);
+        let local = self.globals.len() as ReqId;
+        self.globals.push(spec.id);
+        self.remap.push(spec.id);
+        let local_spec = RequestSpec { id: local, ..spec };
+        self.reqs.insert(local_spec);
+        self.stolen_in += 1;
+        if self.tracer.enabled() {
+            self.tracer.record(Event::Migrate {
+                t: now,
+                req: local,
+                from_shard: from,
+                to_shard: to,
+                slack,
+            });
+        }
+        self.policy.on_arrival(now, &self.reqs, local);
+    }
+
     /// Consult the policy while the processor is idle — the same
     /// issue/validate/sleep block as the single-engine loop. With zero
     /// live requests there is nothing a policy may legally execute, so
@@ -392,12 +545,21 @@ impl<'e> ShardCore<'e> {
         for (id, _) in &mut self.latencies {
             *id = self.globals[*id as usize];
         }
+        let mut stats = self.policy.stats();
+        // bumped only when stealing actually moved work, so steal=none
+        // stats stay byte-identical to the pre-steal engine
+        if self.stolen_out > 0 {
+            stats.bump("stolen_out", self.stolen_out);
+        }
+        if self.stolen_in > 0 {
+            stats.bump("stolen_in", self.stolen_in);
+        }
         RunResult {
             latencies: self.latencies,
             makespan: self.makespan,
             busy: self.busy_total,
             node_execs: self.node_execs,
-            stats: self.policy.stats(),
+            stats,
             queue_wait_hist: self.queue_wait_hist,
             batch_size_hist: self.batch_size_hist,
         }
@@ -417,8 +579,13 @@ pub struct ShardRun {
     pub merged: RunResult,
     /// One [`RunResult`] per shard, latencies already in global ids.
     pub per_shard: Vec<RunResult>,
-    /// Shard index each request was routed to (indexed by global id).
+    /// Shard index each request was routed to *at arrival* (indexed by
+    /// global id). See [`ShardRun::final_assignment`] for where each
+    /// request actually executed after work stealing.
     pub assignment: Vec<usize>,
+    /// Every cross-shard steal performed during the run, in occurrence
+    /// order (global ids; empty unless a [`StealPolicy`] moved work).
+    pub migrations: Vec<Migration>,
 }
 
 impl ShardRun {
@@ -448,6 +615,16 @@ impl ShardRun {
             counts[s] += 1;
         }
         counts
+    }
+
+    /// Arrival-time routing corrected by migrations: the shard that
+    /// finally executed each request (on chained steals, last hop wins).
+    pub fn final_assignment(&self) -> Vec<usize> {
+        let mut a = self.assignment.clone();
+        for m in &self.migrations {
+            a[m.req as usize] = m.to;
+        }
+        a
     }
 }
 
@@ -514,11 +691,17 @@ pub struct ShardedEngine {
     engine: SimEngine,
     shards: usize,
     dispatch: DispatchPolicy,
+    steal: StealPolicy,
+    /// SLA target the slack-aware steal ordering estimates against.
+    sla: Nanos,
+    /// Decoder-unroll bound for the queued-slack estimate.
+    dec_timesteps: usize,
 }
 
 impl ShardedEngine {
     /// `shards` replicas of the device described by `tables`/`cfg`, fed
-    /// through `dispatch`.
+    /// through `dispatch`. Work stealing starts disabled
+    /// ([`StealPolicy::None`]); see [`ShardedEngine::with_steal`].
     pub fn new(
         tables: Vec<Arc<crate::model::LatencyTable>>,
         cfg: crate::sim::SimConfig,
@@ -526,11 +709,35 @@ impl ShardedEngine {
         dispatch: DispatchPolicy,
     ) -> ShardedEngine {
         assert!(shards >= 1, "need at least one shard");
+        let dyn_graph = tables
+            .first()
+            .map(|t| t.graph.is_dynamic())
+            .unwrap_or(false);
         ShardedEngine {
             engine: SimEngine::new(tables, cfg),
             shards,
             dispatch,
+            steal: StealPolicy::None,
+            sla: 100 * MS,
+            dec_timesteps: SlackPredictor::default_dec_timesteps(dyn_graph),
         }
+    }
+
+    /// Enable work stealing. `sla` and `dec_timesteps` parameterize the
+    /// queued-slack estimate ([`crate::coordinator::queued_slack`]) the
+    /// slack-aware policy orders victims by — pass the same values the
+    /// shard policies were built with, so the thief and admission control
+    /// agree on what "least slack" means.
+    pub fn with_steal(
+        mut self,
+        steal: StealPolicy,
+        sla: Nanos,
+        dec_timesteps: usize,
+    ) -> ShardedEngine {
+        self.steal = steal;
+        self.sla = sla;
+        self.dec_timesteps = dec_timesteps.max(1);
+        self
     }
 
     pub fn shards(&self) -> usize {
@@ -539,6 +746,10 @@ impl ShardedEngine {
 
     pub fn dispatch(&self) -> DispatchPolicy {
         self.dispatch
+    }
+
+    pub fn steal(&self) -> StealPolicy {
+        self.steal
     }
 
     /// Run `trace` to completion, constructing one policy per shard via
@@ -573,6 +784,7 @@ impl ShardedEngine {
             .collect();
         let mut dispatcher = Dispatcher::new(self.dispatch);
         let mut assignment: Vec<usize> = Vec::with_capacity(total);
+        let mut migrations: Vec<Migration> = Vec::new();
         let mut next_arrival = 0usize;
         let mut released_total = 0usize;
 
@@ -619,6 +831,11 @@ impl ShardedEngine {
                     core.pump(t);
                 }
             }
+            // 4) once the instant settles, idle shards pull queued work
+            //    from loaded neighbors (no-op under StealPolicy::None).
+            if self.steal != StealPolicy::None && self.shards > 1 {
+                self.steal_pass(&mut cores, t, &mut migrations);
+            }
         }
 
         let per_shard: Vec<RunResult> = cores.into_iter().map(ShardCore::finish).collect();
@@ -629,10 +846,103 @@ impl ShardedEngine {
             "sharded run lost requests in the merge"
         );
         debug_assert_eq!(assignment.len(), total);
-        ShardRun {
+        let run = ShardRun {
             merged,
             per_shard,
             assignment,
+            migrations,
+        };
+        // migration invariant (CI debug-assertions pass): every stolen
+        // request was released by the shard that finally held it — on
+        // chained steals, the last hop.
+        #[cfg(debug_assertions)]
+        {
+            let fin = run.final_assignment();
+            for m in &run.migrations {
+                let s = fin[m.req as usize];
+                debug_assert!(
+                    run.per_shard[s]
+                        .latencies
+                        .iter()
+                        .any(|&(id, _)| id == m.req),
+                    "migrated request {} missing from final shard {s}",
+                    m.req
+                );
+            }
+        }
+        run
+    }
+
+    /// Predicted remaining slack of a request queued on `core` (Eq. 2
+    /// from graph node 0, conservative).
+    fn queued_slack_of(&self, core: &ShardCore<'_>, now: Nanos, local: ReqId) -> i64 {
+        let spec = core.reqs.get(local).spec;
+        queued_slack(
+            &self.engine.tables[spec.model_idx],
+            self.sla,
+            self.dec_timesteps,
+            now,
+            &spec,
+        )
+    }
+
+    /// One steal pass at instant `now`: every fully drained shard pulls
+    /// up to half of the deepest revocable queue — least slack first
+    /// under [`StealPolicy::SlackAware`], FIFO under
+    /// [`StealPolicy::IdlePull`]. Runs after completions, arrivals, and
+    /// timers so it sees the instant's settled state, and is entirely
+    /// deterministic (index-ordered scan, stable sort): the seeded-run
+    /// guarantee survives stealing.
+    fn steal_pass(
+        &self,
+        cores: &mut [ShardCore<'_>],
+        now: Nanos,
+        migrations: &mut Vec<Migration>,
+    ) {
+        let n = cores.len();
+        for thief in 0..n {
+            if cores[thief].in_flight() > 0 {
+                continue;
+            }
+            // victim: deepest revocable queue (ties → lowest index)
+            let mut victim = 0usize;
+            let mut best_depth = 0usize;
+            for (v, core) in cores.iter().enumerate() {
+                if v == thief {
+                    continue;
+                }
+                let d = core.revocable().len();
+                if d > best_depth {
+                    best_depth = d;
+                    victim = v;
+                }
+            }
+            if best_depth == 0 {
+                continue;
+            }
+            let take = best_depth.div_ceil(2);
+            let mut cand = cores[victim].revocable();
+            if self.steal == StealPolicy::SlackAware {
+                let vc = &cores[victim];
+                // stable sort: FIFO within equal slack
+                cand.sort_by_key(|&local| self.queued_slack_of(vc, now, local));
+            }
+            cand.truncate(take);
+            for local in cand {
+                let slack = self.queued_slack_of(&cores[victim], now, local);
+                let Some(spec) = cores[victim].revoke(local) else {
+                    continue;
+                };
+                migrations.push(Migration {
+                    req: spec.id,
+                    from: victim,
+                    to: thief,
+                    t: now,
+                    slack,
+                });
+                cores[thief].inject_migrated(spec, now, victim, thief, slack);
+            }
+            cores[thief].pump(now);
         }
     }
 }
@@ -930,5 +1240,300 @@ mod tests {
             Some(DispatchPolicy::RoundRobin)
         );
         assert_eq!(DispatchPolicy::from_name("nope"), None);
+    }
+
+    #[test]
+    fn jsq_ties_rotate_across_idle_shards() {
+        // At 20 req/s a ResNet request finishes long before the next
+        // arrival, so every dispatch decision is an all-idle exact tie.
+        // The old lowest-index tie-break pinned the whole trace to
+        // shard 0; the rotating tie-break must spread it evenly.
+        let r = run_sharded(
+            Workload::ResNet,
+            "serial",
+            20.0,
+            SEC,
+            4,
+            DispatchPolicy::JoinShortestQueue,
+        );
+        let counts = r.per_shard_requests();
+        assert!(
+            counts.iter().all(|&c| c > 0),
+            "idle ties still pin to one shard: {counts:?}"
+        );
+        let min = *counts.iter().min().unwrap();
+        let max = *counts.iter().max().unwrap();
+        assert!(
+            max - min <= 2,
+            "rotation should spread ties evenly: {counts:?}"
+        );
+        // p2c's tie-break also stops collapsing to the lower index of
+        // the sampled pair (which starves the highest shard at idle)
+        let p = run_sharded(
+            Workload::ResNet,
+            "serial",
+            20.0,
+            SEC,
+            4,
+            DispatchPolicy::P2C { seed: 7 },
+        );
+        let pc = p.per_shard_requests();
+        assert!(
+            pc.iter().filter(|&&c| c > 0).count() >= 3,
+            "p2c ties collapsed: {pc:?}"
+        );
+    }
+
+    // ---- work stealing ----
+
+    fn steal_spec(id: u64, len: usize) -> RequestSpec {
+        RequestSpec {
+            id,
+            arrival: 0,
+            in_len: len,
+            out_len: len,
+            model_idx: 0,
+        }
+    }
+
+    /// Two shards, round-robin routing, serial policy: even ids land on
+    /// shard 0, odd ids on shard 1.
+    fn run_crafted(requests: Vec<RequestSpec>, steal: StealPolicy) -> ShardRun {
+        let t = table(Workload::Gnmt);
+        let trace = Trace {
+            requests,
+            rate_per_sec: 0.0,
+            duration: SEC,
+        };
+        let engine = ShardedEngine::new(
+            vec![t.clone()],
+            SimConfig::default(),
+            2,
+            DispatchPolicy::RoundRobin,
+        )
+        .with_steal(steal, 100 * MS, 32);
+        engine.run(&trace, |_| mk_policy("serial", &t))
+    }
+
+    #[test]
+    fn idle_pull_steals_from_the_loaded_shard() {
+        // shard 0 gets the long requests (ids 0 and 2), shard 1 the short
+        // ones — it drains first and must pull id 2 off shard 0's queue
+        let reqs = vec![
+            steal_spec(0, 30),
+            steal_spec(1, 2),
+            steal_spec(2, 30),
+            steal_spec(3, 2),
+        ];
+        let none = run_crafted(reqs.clone(), StealPolicy::None);
+        assert!(none.migrations.is_empty());
+        let r = run_crafted(reqs, StealPolicy::IdlePull);
+        assert_eq!(r.merged.latencies.len(), 4);
+        assert_eq!(r.migrations.len(), 1, "{:?}", r.migrations);
+        let m = r.migrations[0];
+        assert_eq!((m.req, m.from, m.to), (2, 0, 1));
+        assert_eq!(r.assignment, vec![0, 1, 0, 1]);
+        assert_eq!(r.final_assignment(), vec![0, 1, 1, 1]);
+        // the stolen request no longer waits out shard 0's long head
+        let lat = |run: &ShardRun, id: ReqId| {
+            run.merged
+                .latencies
+                .iter()
+                .find(|&&(i, _)| i == id)
+                .unwrap()
+                .1
+        };
+        assert!(
+            lat(&r, 2) < lat(&none, 2),
+            "steal did not help: {} !< {}",
+            lat(&r, 2),
+            lat(&none, 2)
+        );
+        // steal counters surface in the merged stats
+        assert_eq!(r.merged.stats.extra_counter("stolen_in"), 1);
+        assert_eq!(r.merged.stats.extra_counter("stolen_out"), 1);
+    }
+
+    #[test]
+    fn slack_aware_steals_the_least_slack_request_first() {
+        // shard 0's queue behind its long active head: id 2 (short, FIFO
+        // first) and id 4 (long input ⇒ more remaining work ⇒ least
+        // slack). Queue depth 2 ⇒ the thief takes one.
+        let reqs = vec![
+            steal_spec(0, 30),
+            steal_spec(1, 2),
+            steal_spec(2, 2),
+            steal_spec(3, 2),
+            steal_spec(4, 30),
+        ];
+        let fifo = run_crafted(reqs.clone(), StealPolicy::IdlePull);
+        assert!(!fifo.migrations.is_empty());
+        assert_eq!(fifo.migrations[0].req, 2, "idle-pull steals FIFO");
+        let r = run_crafted(reqs, StealPolicy::SlackAware);
+        assert!(!r.migrations.is_empty());
+        assert_eq!(
+            r.migrations[0].req, 4,
+            "slack-aware must steal the least-slack request: {:?}",
+            r.migrations
+        );
+        // both steals happened at the same settled instant, so the
+        // recorded slacks are directly comparable
+        assert!(r.migrations[0].slack < fifo.migrations[0].slack);
+        assert_eq!(r.merged.latencies.len(), 5);
+    }
+
+    #[test]
+    fn stealing_is_deterministic() {
+        // a burst of 16 co-arriving requests over 4 shards via rr: shards
+        // 0/2 receive long requests, 1/3 short ones — steals guaranteed
+        let mk_burst = || -> Vec<RequestSpec> {
+            (0..16u64)
+                .map(|i| steal_spec(i, if i % 2 == 0 { 25 } else { 2 }))
+                .collect()
+        };
+        for steal in [StealPolicy::IdlePull, StealPolicy::SlackAware] {
+            let t = table(Workload::Gnmt);
+            let trace = Trace {
+                requests: mk_burst(),
+                rate_per_sec: 0.0,
+                duration: SEC,
+            };
+            let run_once = || {
+                ShardedEngine::new(
+                    vec![t.clone()],
+                    SimConfig::default(),
+                    4,
+                    DispatchPolicy::RoundRobin,
+                )
+                .with_steal(steal, 100 * MS, 32)
+                .run(&trace, |_| mk_policy("serial", &t))
+            };
+            let a = run_once();
+            let b = run_once();
+            assert!(!a.migrations.is_empty(), "{steal:?}: no steals happened");
+            assert_eq!(a.migrations, b.migrations, "{steal:?}");
+            assert_eq!(a.assignment, b.assignment, "{steal:?}");
+            assert_eq!(a.merged.latencies, b.merged.latencies, "{steal:?}");
+            assert_eq!(a.merged.latencies.len(), 16, "{steal:?}");
+        }
+    }
+
+    #[test]
+    fn steal_none_is_byte_identical_to_the_pre_steal_engine() {
+        // the steal machinery must be invisible when disabled: a plain
+        // engine and an explicit steal=none engine agree on everything
+        let t = table(Workload::Gnmt);
+        let trace = Trace::generate(&t.graph, 500.0, SEC, 42);
+        let a = ShardedEngine::new(
+            vec![t.clone()],
+            SimConfig::default(),
+            4,
+            DispatchPolicy::RoundRobin,
+        )
+        .run(&trace, |_| mk_policy("lazy", &t));
+        let b = ShardedEngine::new(
+            vec![t.clone()],
+            SimConfig::default(),
+            4,
+            DispatchPolicy::RoundRobin,
+        )
+        .with_steal(StealPolicy::None, 100 * MS, 32)
+        .run(&trace, |_| mk_policy("lazy", &t));
+        assert!(a.migrations.is_empty() && b.migrations.is_empty());
+        assert_eq!(a.assignment, b.assignment);
+        assert_eq!(a.merged.latencies, b.merged.latencies);
+        assert_eq!(a.merged.node_execs, b.merged.node_execs);
+        assert_eq!(a.merged.stats.extra, b.merged.stats.extra);
+        for (x, y) in a.per_shard.iter().zip(&b.per_shard) {
+            assert_eq!(x.latencies, y.latencies);
+        }
+    }
+
+    #[test]
+    fn traced_migrations_carry_global_ids() {
+        let t = table(Workload::Gnmt);
+        let trace = Trace {
+            requests: vec![
+                steal_spec(0, 30),
+                steal_spec(1, 2),
+                steal_spec(2, 30),
+                steal_spec(3, 2),
+            ],
+            rate_per_sec: 0.0,
+            duration: SEC,
+        };
+        let engine = ShardedEngine::new(
+            vec![t.clone()],
+            SimConfig::default(),
+            2,
+            DispatchPolicy::RoundRobin,
+        )
+        .with_steal(StealPolicy::SlackAware, 100 * MS, 32);
+        let recs: Vec<Arc<RecordingTracer>> = (0..2).map(|_| RecordingTracer::new()).collect();
+        let tracers: Vec<TracerRef> = recs.iter().map(|r| r.clone() as TracerRef).collect();
+        let run = engine.run_traced(&trace, |_| mk_policy("serial", &t), &tracers);
+        assert_eq!(run.migrations.len(), 1);
+        let m = run.migrations[0];
+        // the destination shard's stream carries the event, in global ids
+        let events = recs[m.to].take();
+        let migs: Vec<&Event> = events.iter().filter(|e| e.kind() == "migrate").collect();
+        assert_eq!(migs.len(), 1);
+        match migs[0] {
+            Event::Migrate {
+                t,
+                req,
+                from_shard,
+                to_shard,
+                slack,
+            } => {
+                assert_eq!(*req, m.req, "migrate event must use the global id");
+                assert_eq!(*from_shard, m.from);
+                assert_eq!(*to_shard, m.to);
+                assert_eq!(*t, m.t);
+                assert_eq!(*slack, m.slack);
+            }
+            _ => unreachable!(),
+        }
+        // the thief also releases the stolen request under its global id
+        assert!(events
+            .iter()
+            .any(|e| matches!(e, Event::Release { req, .. } if *req == m.req)));
+        // the victim's stream does not double-report the release
+        let victim_events = recs[m.from].take();
+        assert!(!victim_events
+            .iter()
+            .any(|e| matches!(e, Event::Release { req, .. } if *req == m.req)));
+    }
+
+    #[test]
+    fn merge_handles_an_all_empty_shard() {
+        // a shard can end a run without a single released request (all
+        // its work stolen away, or nothing dispatched): merging must not
+        // disturb the totals
+        let one = run_sharded(
+            Workload::ResNet,
+            "lazy",
+            300.0,
+            SEC / 2,
+            1,
+            DispatchPolicy::RoundRobin,
+        );
+        let real = one.per_shard[0].clone();
+        let empty = RunResult {
+            latencies: Vec::new(),
+            makespan: 0,
+            busy: 0,
+            node_execs: 0,
+            stats: PolicyStats::default(),
+            queue_wait_hist: Histogram::queue_wait(),
+            batch_size_hist: Histogram::batch_size(),
+        };
+        let merged = merge_runs(&[real.clone(), empty]);
+        assert_eq!(merged.latencies, real.latencies);
+        assert_eq!(merged.node_execs, real.node_execs);
+        assert_eq!(merged.makespan, real.makespan);
+        assert_eq!(merged.busy, real.busy);
+        assert_eq!(merged.queue_wait_hist.count(), real.queue_wait_hist.count());
+        assert_eq!(merged.batch_size_hist.count(), real.batch_size_hist.count());
     }
 }

@@ -101,6 +101,19 @@ pub enum Event {
         latency: Nanos,
         queue_wait: Nanos,
     },
+    /// A queued (never-issued) request was stolen from one shard's queue
+    /// and re-admitted on another. Emitted once, by the *destination*
+    /// shard, so in a per-shard stream layout the marker lands on the
+    /// thief's processor track. `slack` is the request's predicted
+    /// remaining slack at steal time (the ordering key of slack-aware
+    /// stealing).
+    Migrate {
+        t: Nanos,
+        req: ReqId,
+        from_shard: usize,
+        to_shard: usize,
+        slack: i64,
+    },
 }
 
 impl Event {
@@ -115,7 +128,8 @@ impl Event {
             | Event::Merge { t, .. }
             | Event::Preempt { t, .. }
             | Event::Stall { t, .. }
-            | Event::Release { t, .. } => *t,
+            | Event::Release { t, .. }
+            | Event::Migrate { t, .. } => *t,
             Event::NodeExec { start, .. } => *start,
         }
     }
@@ -133,6 +147,7 @@ impl Event {
             Event::Stall { .. } => "stall",
             Event::NodeExec { .. } => "node_exec",
             Event::Release { .. } => "release",
+            Event::Migrate { .. } => "migrate",
         }
     }
 }
@@ -160,6 +175,15 @@ mod tests {
         };
         assert_eq!(r.timestamp(), 99);
         assert_eq!(r.kind(), "release");
+        let m = Event::Migrate {
+            t: 55,
+            req: 3,
+            from_shard: 0,
+            to_shard: 2,
+            slack: -7,
+        };
+        assert_eq!(m.timestamp(), 55);
+        assert_eq!(m.kind(), "migrate");
     }
 
     #[test]

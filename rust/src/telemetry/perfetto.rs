@@ -338,6 +338,24 @@ fn stream_rows(
                     ));
                 }
             }
+            Event::Migrate {
+                t,
+                req,
+                from_shard,
+                to_shard,
+                slack,
+            } => {
+                // the thief's processor track shows the steal decision;
+                // the request's own track shows the hop in its lifecycle
+                request_ids.push(*req);
+                let args = Json::obj()
+                    .set("req", *req)
+                    .set("from_shard", *from_shard)
+                    .set("to_shard", *to_shard)
+                    .set("slack_ns", *slack);
+                rows.push(instant(pid_proc, 0, "steal", "decision", *t, args.clone()));
+                rows.push(instant(pid_requests, *req, "migrate", "lifecycle", *t, args));
+            }
             Event::Release {
                 t,
                 req,
@@ -387,6 +405,8 @@ pub struct RequestTimeline {
     pub max_batch: u32,
     /// Times the request's sub-batch was preempted by later arrivals.
     pub preempted: u32,
+    /// Cross-shard migrations (work-stealing hops) the request made.
+    pub migrations: u32,
 }
 
 /// Reduce an event stream to one summary row per request (arrival order).
@@ -406,6 +426,7 @@ pub fn request_timelines(events: &[Event]) -> Vec<RequestTimeline> {
                 node_execs: 0,
                 max_batch: 0,
                 preempted: 0,
+                migrations: 0,
             }),
             Event::NodeExec { members, .. } => {
                 for &id in members {
@@ -420,6 +441,11 @@ pub fn request_timelines(events: &[Event]) -> Vec<RequestTimeline> {
                     if let Some(i) = find(&mut rows, id) {
                         rows[i].preempted += 1;
                     }
+                }
+            }
+            Event::Migrate { req, .. } => {
+                if let Some(i) = find(&mut rows, *req) {
+                    rows[i].migrations += 1;
                 }
             }
             Event::Release {
@@ -745,6 +771,54 @@ mod tests {
             a.replace(r#"{"name":"processor"}"#, r#"{"name":"shard 0"}"#),
             b
         );
+    }
+
+    #[test]
+    fn migrate_events_render_on_both_track_groups() {
+        let events = vec![
+            Event::RunStart {
+                policy: "LazyB".into(),
+            },
+            Event::Arrival {
+                t: 0,
+                req: 5,
+                model: 0,
+                in_len: 1,
+                out_len: 1,
+            },
+            Event::Migrate {
+                t: 200,
+                req: 5,
+                from_shard: 0,
+                to_shard: 1,
+                slack: 1234,
+            },
+            Event::NodeExec {
+                start: 200,
+                dur: 300,
+                tpos: 0,
+                members: vec![5],
+                padded: false,
+            },
+            Event::Release {
+                t: 500,
+                req: 5,
+                latency: 500,
+                queue_wait: 200,
+            },
+        ];
+        let text = chrome_trace(&events).render();
+        assert_valid_json(&text);
+        // steal marker on the processor track, migrate on the request track
+        assert!(text.contains(r#""name":"steal","cat":"decision""#), "{text}");
+        assert!(text.contains(r#""name":"migrate","cat":"lifecycle""#), "{text}");
+        assert!(text.contains(r#""from_shard":0"#));
+        assert!(text.contains(r#""to_shard":1"#));
+        assert!(text.contains(r#""slack_ns":1234"#));
+        let tl = request_timelines(&events);
+        assert_eq!(tl.len(), 1);
+        assert_eq!(tl[0].migrations, 1);
+        assert_eq!(tl[0].latency, Some(500));
     }
 
     #[test]

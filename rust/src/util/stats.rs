@@ -35,7 +35,9 @@ impl Summary {
             };
         }
         let mut v: Vec<f64> = samples.to_vec();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp: a stray NaN sample sorts (to the end) instead of
+        // panicking the summary of an otherwise-fine run
+        v.sort_by(f64::total_cmp);
         let mean = v.iter().sum::<f64>() / v.len() as f64;
         Summary {
             count: v.len(),
@@ -89,7 +91,7 @@ pub fn geomean(xs: &[f64]) -> f64 {
 /// `<= t` for each `t` in `thresholds`.
 pub fn cdf_at(samples: &[f64], thresholds: &[f64]) -> Vec<f64> {
     let mut v: Vec<f64> = samples.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     cdf_at_sorted(&v, thresholds)
 }
 
@@ -153,6 +155,17 @@ mod tests {
             assert!(q >= prev);
             prev = q;
         }
+    }
+
+    #[test]
+    fn nan_sample_does_not_panic_summary() {
+        // regression: partial_cmp().unwrap() aborted the whole summary on
+        // one NaN; total_cmp sorts it to the end instead
+        let s = Summary::of(&[2.0, f64::NAN, 1.0]);
+        assert_eq!(s.count, 3);
+        assert_eq!(s.min, 1.0);
+        let c = cdf_at(&[2.0, f64::NAN, 1.0], &[1.5]);
+        assert!((c[0] - 1.0 / 3.0).abs() < 1e-12);
     }
 
     #[test]

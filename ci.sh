@@ -38,6 +38,38 @@ if [[ "${1:-}" != "--fast" ]]; then
         printf '%s\n' "$steal_json" | grep -iw nan >&2
         exit 1
     fi
+    # smoke: engine hot-path throughput -> BENCH_engine.json (repo root),
+    # then gate on NaN and on a >3x regression against the committed
+    # baselines below. The bench itself asserts the optimized engine is
+    # byte-identical to the reference slack path before timing anything.
+    echo "== perf_engine --json (BENCH_engine.json + regression gate)"
+    env LB_BENCH_RUNS=2 LB_BENCH_SECS=0.2 \
+        cargo bench --bench perf_engine -- --json > ../BENCH_engine.json
+    if grep -qiw nan ../BENCH_engine.json; then
+        echo "ci: NaN field in perf_engine JSON output" >&2
+        grep -iw nan ../BENCH_engine.json >&2
+        exit 1
+    fi
+    # Committed simulated-req/s baselines per policy. Deliberately loose
+    # (well below any machine this has run on): the /3 gate catches an
+    # accidental O(n^2) reintroduction in the hot path, not machine noise.
+    python3 - ../BENCH_engine.json <<'EOF'
+import json, sys
+BASELINE = {"serial": 1500.0, "lazy": 600.0, "graphb": 1500.0}
+doc = json.load(open(sys.argv[1]))
+assert doc["bench"] == "perf_engine", doc
+failed = False
+for p in doc["points"]:
+    rps, floor = p["sim_req_per_sec"], BASELINE[p["policy"]] / 3.0
+    tag = f'{p["policy"]}/shards={p["shards"]}'
+    if rps is None or rps != rps or rps < floor:
+        print(f"ci: perf_engine regression: {tag} at {rps} sim req/s "
+              f"(floor {floor:.0f})", file=sys.stderr)
+        failed = True
+    else:
+        print(f"perf_engine {tag}: {rps:.0f} sim req/s (floor {floor:.0f})")
+sys.exit(1 if failed else 0)
+EOF
 fi
 
 echo "ci: OK"

@@ -1,0 +1,155 @@
+//! **Perf / engine hot path** — simulator throughput itself: how many
+//! *simulated* requests the engine retires per wall-clock second, for
+//! serial / lazy / graphb at 1 and 4 shards.
+//!
+//! For the slack-predicting policy the same configurations also run on
+//! the in-tree reference slack path (`ExpConfig::reference`: full
+//! per-node latency scans, no epoch cache) — the byte-identical baseline
+//! the optimized engine is pinned against — and the speedup over it is
+//! reported. Before timing anything, a small run asserts the two paths
+//! produce identical aggregates.
+//!
+//! Expectation: >= 5x simulated-req/s on lazy at rate >= 500.
+//!
+//! Flags: `--rate <req/s>` (default 800), `--shards 1,4` (comma list),
+//! `--json` (one point per policy x shard count; redirect to
+//! `BENCH_engine.json` — the CI regression gate reads it).
+
+use std::time::Instant;
+
+use lazybatching::exp::{self, ExpConfig, JsonReport, PolicyCfg};
+use lazybatching::model::Workload;
+use lazybatching::util::cli::Args;
+use lazybatching::util::json::Json;
+use lazybatching::util::table::{f3, Table};
+
+/// Wall-clock simulated-request throughput of `cfg`: run its seeds
+/// back-to-back (table profiled once, outside the clock) and divide the
+/// total released requests by the elapsed real time.
+fn simulated_rps(cfg: &ExpConfig) -> f64 {
+    let table = exp::make_table(cfg.workload, cfg.device, cfg.max_batch);
+    let mut total = 0usize;
+    let start = Instant::now();
+    for i in 0..cfg.runs {
+        let seed = cfg.seed.wrapping_add(i as u64 * 7919);
+        let r = exp::run_once(cfg, table.clone(), seed);
+        total += r.latencies.len();
+    }
+    let secs = start.elapsed().as_secs_f64();
+    total as f64 / secs.max(1e-9)
+}
+
+fn main() {
+    let args = Args::from_env();
+    let mut report = JsonReport::from_args("perf_engine");
+    let rate = args.get_f64("rate", 800.0).expect("--rate");
+    assert!(rate >= 500.0, "--rate: the pinned baseline needs >= 500");
+    let shard_list: Vec<usize> = match args.get("shards") {
+        None => vec![1, 4],
+        Some(s) => s
+            .split(',')
+            .map(|x| x.trim().parse().expect("--shards: expected integers"))
+            .collect(),
+    };
+    assert!(
+        shard_list.iter().all(|&s| s >= 1),
+        "--shards: every count must be >= 1"
+    );
+    let runs = exp::bench_runs();
+
+    let base = ExpConfig {
+        workload: Workload::ResNet,
+        rate,
+        duration: exp::bench_duration(),
+        runs,
+        ..ExpConfig::default()
+    };
+
+    // correctness first: the optimized path must be byte-identical to the
+    // reference slack path before its speed means anything
+    let small = ExpConfig {
+        policy: PolicyCfg::Lazy,
+        runs: 2,
+        ..base.clone()
+    };
+    let opt = exp::run(&small);
+    let refr = exp::run(&ExpConfig {
+        reference: true,
+        ..small.clone()
+    });
+    assert_eq!(
+        opt.to_json(small.sla).render(),
+        refr.to_json(small.sla).render(),
+        "optimized engine diverged from the reference slack path"
+    );
+
+    if !report.enabled() {
+        println!("perf_engine — simulator throughput @ {rate} req/s (ResNet)");
+        println!("optimized vs reference identity: ok");
+    }
+
+    let policies: [(&str, PolicyCfg); 3] = [
+        ("serial", PolicyCfg::Serial),
+        ("lazy", PolicyCfg::Lazy),
+        ("graphb", PolicyCfg::GraphB(35)),
+    ];
+    let mut t = Table::new(vec![
+        "policy",
+        "shards",
+        "sim req/s",
+        "ref req/s",
+        "speedup",
+    ]);
+    for &(name, policy) in &policies {
+        for &shards in &shard_list {
+            let cfg = ExpConfig {
+                policy,
+                shards,
+                ..base.clone()
+            };
+            let rps = simulated_rps(&cfg);
+            // the reference path only differs under slack prediction
+            let ref_rps = match policy {
+                PolicyCfg::Lazy | PolicyCfg::Oracle => Some(simulated_rps(&ExpConfig {
+                    reference: true,
+                    ..cfg.clone()
+                })),
+                _ => None,
+            };
+            let speedup = ref_rps.map(|r| rps / r.max(1e-9));
+            t.row(vec![
+                name.to_string(),
+                format!("{shards}"),
+                f3(rps),
+                ref_rps.map(f3).unwrap_or_else(|| "-".into()),
+                speedup
+                    .map(|s| format!("{s:.2}x"))
+                    .unwrap_or_else(|| "-".into()),
+            ]);
+            report.push(
+                Json::obj()
+                    .set("policy", name)
+                    .set("workload", cfg.workload.name())
+                    .set("rate", rate)
+                    .set("shards", shards)
+                    .set("runs", runs)
+                    .set("sim_req_per_sec", rps)
+                    .set(
+                        "reference_req_per_sec",
+                        ref_rps.map(Json::Num).unwrap_or(Json::Null),
+                    )
+                    .set(
+                        "speedup_vs_reference",
+                        speedup.map(Json::Num).unwrap_or(Json::Null),
+                    ),
+            );
+        }
+    }
+
+    if report.enabled() {
+        report.print();
+    } else {
+        t.print();
+        println!("\nexpected: >= 5x simulated-req/s on lazy vs the reference slack path");
+    }
+}

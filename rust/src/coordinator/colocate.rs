@@ -147,18 +147,14 @@ impl Batcher for ColocLazy {
         released: &mut Vec<ReqId>,
     ) {
         let m = reqs.get(completion.exec.reqs[0]).spec.model_idx;
-        let mut finished = Vec::new();
-        let mut advanced = Vec::new();
+        // exec.reqs is a clone of this model's top entry (same order):
+        // dispositions apply positionally — no membership filters
+        self.bts[m].retire_top_by(&completion.transitions);
         for (&id, &tr) in completion.exec.reqs.iter().zip(&completion.transitions) {
-            match tr {
-                Transition::Finished => finished.push(id),
-                Transition::Advanced => advanced.push(id),
-                Transition::Repeat => {}
-                Transition::Masked => unreachable!("ColocLazy never pads"),
+            if tr == Transition::Finished {
+                released.push(id);
             }
         }
-        self.bts[m].retire_top(&finished, &advanced);
-        released.extend_from_slice(&finished);
     }
 
     fn next_action(&mut self, now: Nanos, reqs: &Reqs) -> Action {

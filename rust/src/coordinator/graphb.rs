@@ -168,6 +168,10 @@ impl Batcher for GraphBatching {
         self.queue.iter().copied().collect()
     }
 
+    fn revocable_len(&self) -> usize {
+        self.queue.len()
+    }
+
     fn try_revoke(&mut self, id: ReqId) -> bool {
         match self.queue.iter().position(|&q| q == id) {
             Some(pos) => {

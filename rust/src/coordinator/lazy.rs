@@ -16,7 +16,7 @@
 //! as §IV-B prescribes. An input is always admitted when nothing is in
 //! flight (execution, not batching — no SLA question arises).
 
-use std::collections::VecDeque;
+use std::collections::{HashSet, VecDeque};
 use std::sync::Arc;
 
 use super::batch_table::{BatchTable, Entry};
@@ -50,6 +50,11 @@ pub struct LazyBatching {
     predictor: SlackPredictor,
     bt: BatchTable,
     pending: VecDeque<ReqId>,
+    /// Mirror of `pending` for O(1) membership (revocation fast path).
+    pending_set: HashSet<ReqId>,
+    /// Scratch for the admission candidate prefix — reused every node
+    /// boundary instead of collecting a fresh `Vec` per decision.
+    cand_buf: Vec<ReqId>,
     max_batch: usize,
     admission: AdmissionRule,
     stats: PolicyStats,
@@ -64,10 +69,16 @@ impl LazyBatching {
         mode: SlackMode,
         max_batch: usize,
     ) -> LazyBatching {
+        let predictor = SlackPredictor::new(table, sla_target, dec_timesteps, mode);
+        // this scheduler owns the BatchTable, so it can uphold the epoch
+        // invalidation contract (bump on admission push and on retire)
+        predictor.enable_epoch_cache();
         LazyBatching {
-            predictor: SlackPredictor::new(table, sla_target, dec_timesteps, mode),
+            predictor,
             bt: BatchTable::new(),
             pending: VecDeque::new(),
+            pending_set: HashSet::new(),
+            cand_buf: Vec::new(),
             max_batch,
             admission: AdmissionRule::Eq2,
             stats: PolicyStats::default(),
@@ -78,6 +89,14 @@ impl LazyBatching {
     /// Select the admission rule (ablation knob; default [`AdmissionRule::Eq2`]).
     pub fn with_admission(mut self, rule: AdmissionRule) -> LazyBatching {
         self.admission = rule;
+        self
+    }
+
+    /// Golden-test baseline: price slack with the O(nodes) scan reference
+    /// and disable the epoch cache. Decisions must be byte-identical to
+    /// the optimized path (pinned by `tests/golden_engine.rs`).
+    pub fn with_reference_slack(mut self) -> LazyBatching {
+        self.predictor.reference = true;
         self
     }
 
@@ -102,29 +121,29 @@ impl LazyBatching {
         &self.bt
     }
 
-    fn pending_prefix(&self, k: usize) -> Vec<ReqId> {
-        self.pending.iter().take(k).copied().collect()
-    }
-
     /// Largest prefix of the pending queue the predictor admits. The test
     /// is monotone in the admitted count (each extra input only adds
     /// estimated execution time), so a linear scan finds the maximum.
-    fn admissible_count(&self, now: Nanos, reqs: &Reqs) -> usize {
+    ///
+    /// Fills `cand_buf` with the pending prefix of length
+    /// `min(max_batch, |pending|)` as a side effect, so the caller can
+    /// slice candidates without re-collecting.
+    fn admissible_count(&mut self, now: Nanos, reqs: &Reqs) -> usize {
         let cap = self.max_batch.min(self.pending.len());
+        self.cand_buf.clear();
+        self.cand_buf.extend(self.pending.iter().take(cap).copied());
         match self.admission {
             AdmissionRule::Eq2 => {
-                let cand = self.pending_prefix(cap);
-                self.predictor.max_admissible(now, reqs, &self.bt, &cand)
+                self.predictor
+                    .max_admissible(now, reqs, &self.bt, &self.cand_buf)
             }
             AdmissionRule::NoFlip => {
                 // ablation path: per-prefix test (not performance-critical)
                 let mut k = 0;
-                let mut candidate: Vec<ReqId> = Vec::with_capacity(cap);
                 for i in 0..cap {
-                    candidate.push(self.pending[i]);
                     if self
                         .predictor
-                        .admission_allowed(now, reqs, &self.bt, &candidate)
+                        .admission_allowed(now, reqs, &self.bt, &self.cand_buf[..=i])
                     {
                         k = i + 1;
                     } else {
@@ -192,6 +211,7 @@ impl Batcher for LazyBatching {
 
     fn on_arrival(&mut self, _now: Nanos, _reqs: &Reqs, id: ReqId) {
         self.pending.push_back(id);
+        self.pending_set.insert(id);
     }
 
     fn on_complete(
@@ -204,6 +224,8 @@ impl Batcher for LazyBatching {
         // exec.reqs is a clone of the top entry (same order): dispositions
         // apply positionally — single O(n) pass, no membership scans
         self.bt.retire_top_by(&completion.transitions);
+        // in-flight membership and cursors changed under the predictor
+        self.predictor.invalidate_cache();
         // LazyBatching releases responses the moment a program finishes.
         for (&id, &tr) in completion.exec.reqs.iter().zip(&completion.transitions) {
             if tr == Transition::Finished {
@@ -247,8 +269,9 @@ impl Batcher for LazyBatching {
                 if self.tracer.enabled() {
                     // what the slack model saw for this boundary's
                     // candidate (1-prefix when everything was denied, so
-                    // every Denied has an estimate to join against)
-                    let cand = self.pending_prefix(k.max(1));
+                    // every Denied has an estimate to join against);
+                    // cand_buf still holds the capped pending prefix
+                    let cand = self.cand_buf[..k.max(1).min(self.cand_buf.len())].to_vec();
                     let predicted_slack = self
                         .predictor
                         .min_slack_if_admitted(now, reqs, &self.bt, &cand);
@@ -258,7 +281,7 @@ impl Batcher for LazyBatching {
                         predicted_slack,
                     });
                 }
-                if k > 0 && self.preemption_pays_off(reqs, &self.pending_prefix(k)) {
+                if k > 0 && self.preemption_pays_off(reqs, &self.cand_buf[..k]) {
                     k
                 } else {
                     deny_reason = if k == 0 {
@@ -275,6 +298,9 @@ impl Batcher for LazyBatching {
                     self.stats.preemptions += 1;
                 }
                 let ids: Vec<ReqId> = self.pending.drain(..k).collect();
+                for id in &ids {
+                    self.pending_set.remove(id);
+                }
                 self.stats.admitted += ids.len() as u64;
                 if self.tracer.enabled() {
                     if preempting {
@@ -299,6 +325,8 @@ impl Batcher for LazyBatching {
                     reqs: ids,
                     tpos: 0,
                 });
+                // admission changed in-flight membership
+                self.predictor.invalidate_cache();
                 // a brand-new entry may merge with a top that is also at
                 // its node (e.g. both at node 0)
                 let merged = self.bt.merge_top(self.max_batch);
@@ -343,14 +371,23 @@ impl Batcher for LazyBatching {
         self.pending.iter().copied().collect()
     }
 
+    fn revocable_len(&self) -> usize {
+        self.pending.len()
+    }
+
     fn try_revoke(&mut self, id: ReqId) -> bool {
-        match self.pending.iter().position(|&q| q == id) {
-            Some(pos) => {
-                self.pending.remove(pos);
-                true
-            }
-            None => false,
+        // O(1) membership test first; the positional remove only runs for
+        // actual hits (rare — once per stolen request)
+        if !self.pending_set.remove(&id) {
+            return false;
         }
+        let pos = self
+            .pending
+            .iter()
+            .position(|&q| q == id)
+            .expect("pending_set and pending queue out of sync");
+        self.pending.remove(pos);
+        true
     }
 
     fn stats(&self) -> PolicyStats {

@@ -228,6 +228,14 @@ pub trait Batcher {
         Vec::new()
     }
 
+    /// Number of ids [`Batcher::revocable`] would return. The steal pass
+    /// ranks every shard by backlog depth each settled instant; this lets
+    /// that scan run without materializing any id list. Policies with a
+    /// queue should override it with an O(1) length read.
+    fn revocable_len(&self) -> usize {
+        self.revocable().len()
+    }
+
     /// Remove `id` from the policy's queue so it can migrate to another
     /// shard. Must return `true` only if `id` was revocable (i.e. listed
     /// by [`Batcher::revocable`]) and the policy has forgotten it

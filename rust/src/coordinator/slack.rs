@@ -18,6 +18,8 @@
 //!   BatchTable's deterministic node-level schedule to get exact
 //!   completion times (absent future arrivals).
 
+use std::cell::Cell;
+use std::collections::HashMap;
 use std::sync::Arc;
 
 use super::batch_table::BatchTable;
@@ -61,6 +63,22 @@ pub struct SlackPredictor {
     /// Static decoder-unroll bound (Algorithm 1's `dec_timesteps`).
     pub dec_timesteps: usize,
     pub mode: SlackMode,
+    /// Golden-test baseline: price remaining time with the O(nodes) scan
+    /// reference and never consult the epoch cache.
+    pub reference: bool,
+    /// Epoch cache for the conservative in-flight aggregate
+    /// (Σ est_remaining, min arrival). Opt-in via
+    /// [`Self::enable_epoch_cache`]: the owner must call
+    /// [`Self::invalidate_cache`] whenever BatchTable membership or any
+    /// in-flight cursor changes (admission push, completion/preemption
+    /// retire). Unchanged queues between node boundaries then reuse the
+    /// prior aggregate instead of re-walking every in-flight request.
+    epoch_cache: Cell<bool>,
+    epoch: Cell<u64>,
+    cached_epoch: Cell<u64>,
+    cache_full: Cell<bool>,
+    cached_total: Cell<i64>,
+    cached_min_arrival: Cell<Nanos>,
 }
 
 impl SlackPredictor {
@@ -75,7 +93,53 @@ impl SlackPredictor {
             sla_target,
             dec_timesteps,
             mode,
+            reference: false,
+            epoch_cache: Cell::new(false),
+            epoch: Cell::new(0),
+            cached_epoch: Cell::new(0),
+            cache_full: Cell::new(false),
+            cached_total: Cell::new(0),
+            cached_min_arrival: Cell::new(Nanos::MAX),
         }
+    }
+
+    /// Turn the epoch cache on. Only the owning scheduler should do this —
+    /// it takes on the invalidation contract documented on the fields.
+    pub fn enable_epoch_cache(&self) {
+        self.epoch_cache.set(true);
+    }
+
+    /// Bump the epoch: the next aggregate query recomputes from scratch.
+    #[inline]
+    pub fn invalidate_cache(&self) {
+        self.epoch.set(self.epoch.get().wrapping_add(1));
+    }
+
+    /// Conservative in-flight aggregate over `bt`: (Σ est_remaining as
+    /// i64, min arrival; `Nanos::MAX` when nothing is in flight). Cached
+    /// per epoch when the cache is enabled. Both values are
+    /// `now`-independent, so a cached pair reproduces the per-id walk
+    /// bit-for-bit at any query time.
+    fn inflight_aggregate(&self, reqs: &Reqs, bt: &BatchTable) -> (i64, Nanos) {
+        let use_cache = self.epoch_cache.get() && !self.reference;
+        if use_cache && self.cache_full.get() && self.cached_epoch.get() == self.epoch.get() {
+            return (self.cached_total.get(), self.cached_min_arrival.get());
+        }
+        let mut total: i64 = 0;
+        let mut min_arrival = Nanos::MAX;
+        for e in bt.iter_top_down() {
+            for &id in &e.reqs {
+                total += self.est_remaining(reqs, id) as i64;
+                min_arrival = min_arrival.min(reqs.get(id).spec.arrival);
+            }
+        }
+        if use_cache {
+            self.cache_full.set(true);
+            self.cached_epoch.set(self.epoch.get());
+            self.cached_total.set(total);
+            self.cached_min_arrival.set(min_arrival);
+        }
+        (total, min_arrival)
     }
 
     /// Conservative single-request remaining-time estimate from the
@@ -83,6 +147,14 @@ impl SlackPredictor {
     /// by progress already made).
     pub fn est_remaining(&self, reqs: &Reqs, id: ReqId) -> Nanos {
         let st = reqs.get(id);
+        if self.reference {
+            return self.table.remaining_exec_time_scan(
+                st.cursor.tpos,
+                st.cursor.step,
+                st.spec.in_len,
+                self.dec_timesteps,
+            );
+        }
         self.table.remaining_exec_time(
             st.cursor.tpos,
             st.cursor.step,
@@ -132,17 +204,15 @@ impl SlackPredictor {
     ) -> usize {
         match self.mode {
             SlackMode::Conservative => {
-                let mut total: i64 = 0;
-                // headroom_i = SLA - elapsed_i; min over in-flight
-                let mut min_headroom = i64::MAX;
-                for e in bt.iter_top_down() {
-                    for &id in &e.reqs {
-                        total += self.est_remaining(reqs, id) as i64;
-                        let elapsed = now.saturating_sub(reqs.get(id).spec.arrival);
-                        min_headroom =
-                            min_headroom.min(self.sla_target as i64 - elapsed as i64);
-                    }
-                }
+                // headroom_i = SLA - elapsed_i; the in-flight minimum is
+                // attained at the earliest arrival, so the (epoch-cached)
+                // aggregate reproduces the per-id walk exactly
+                let (mut total, min_arrival) = self.inflight_aggregate(reqs, bt);
+                let mut min_headroom = if min_arrival == Nanos::MAX {
+                    i64::MAX
+                } else {
+                    self.sla_target as i64 - now.saturating_sub(min_arrival) as i64
+                };
                 let mut best = 0;
                 for (i, &id) in pending.iter().enumerate() {
                     total += self.est_remaining(reqs, id) as i64;
@@ -232,15 +302,18 @@ impl SlackPredictor {
                 true
             }
             SlackMode::Oracle => {
-                // true completion times with vs without the admission
+                // true completion times with vs without the admission;
+                // index the without-side once so each with-side lookup is
+                // O(1) instead of a rescan (quadratic in queue depth)
                 let with = self.oracle_completions(now, reqs, bt, pending);
-                let without = self.oracle_completions(now, reqs, bt, &[]);
+                let without: HashMap<ReqId, Nanos> =
+                    self.oracle_completions(now, reqs, bt, &[]).into_iter().collect();
                 let meets = |t: Nanos, id: ReqId| {
                     t.saturating_sub(reqs.get(id).spec.arrival) <= self.sla_target
                 };
                 for (id, t_with) in &with {
-                    let would_meet = match without.iter().find(|(i, _)| i == id) {
-                        Some(&(_, t_wo)) => meets(t_wo, *id),
+                    let would_meet = match without.get(id) {
+                        Some(&t_wo) => meets(t_wo, *id),
                         // candidate: best case = drain current stack, then
                         // run the candidate set as its own batch
                         None => true,
@@ -553,6 +626,57 @@ mod tests {
         // a hopeless SLA goes negative
         let doomed = queued_slack(&t, MS / 10, 32, now, &old);
         assert!(doomed < 0);
+    }
+
+    #[test]
+    fn epoch_cache_matches_fresh_predictor() {
+        // a cached predictor whose owner invalidates on every BatchTable
+        // mutation must agree with an uncached one at every query
+        let (_t, cached) = setup(Workload::Gnmt, 100, SlackMode::Conservative);
+        let (_t2, fresh) = setup(Workload::Gnmt, 100, SlackMode::Conservative);
+        cached.enable_epoch_cache();
+        let mut reqs = Reqs::default();
+        for i in 0..8 {
+            reqs.insert(req(i, (i as Nanos) * MS, 12, 12));
+        }
+        let mut bt = BatchTable::new();
+        let pending: Vec<ReqId> = vec![4, 5, 6, 7];
+        for (step, push) in [(0usize, None), (1, Some((vec![0, 1], 3))), (2, Some((vec![2, 3], 1)))]
+        {
+            if let Some((ids, tpos)) = push {
+                bt.push(Entry { reqs: ids, tpos });
+                cached.invalidate_cache();
+            }
+            for q in 0..3u64 {
+                let now = (10 + step as Nanos * 5 + q as Nanos) * MS;
+                // repeated queries at the same epoch hit the cache
+                assert_eq!(
+                    cached.max_admissible(now, &reqs, &bt, &pending),
+                    fresh.max_admissible(now, &reqs, &bt, &pending),
+                    "step={step} q={q}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn reference_mode_matches_optimized_estimates() {
+        let (_t, opt) = setup(Workload::Transformer, 100, SlackMode::Conservative);
+        let (_t2, mut refp) = setup(Workload::Transformer, 100, SlackMode::Conservative);
+        refp.reference = true;
+        let mut reqs = Reqs::default();
+        for i in 0..5 {
+            reqs.insert(req(i, 0, 9 + i as usize, 8));
+        }
+        let bt = BatchTable::new();
+        let ids: Vec<ReqId> = (0..5).collect();
+        for &id in &ids {
+            assert_eq!(opt.est_remaining(&reqs, id), refp.est_remaining(&reqs, id));
+        }
+        assert_eq!(
+            opt.max_admissible(MS, &reqs, &bt, &ids),
+            refp.max_admissible(MS, &reqs, &bt, &ids)
+        );
     }
 
     #[test]

@@ -88,6 +88,10 @@ pub struct ExpConfig {
     /// [`StealPolicy::None`] keeps sharded runs byte-identical to the
     /// pre-steal engine.
     pub steal: StealPolicy,
+    /// Run Lazy/Oracle with the unoptimized reference slack path (full
+    /// per-node scans, no epoch cache). Golden tests pin the optimized
+    /// engine byte-identical to this; benches report the speedup over it.
+    pub reference: bool,
 }
 
 impl Default for ExpConfig {
@@ -107,6 +111,7 @@ impl Default for ExpConfig {
             shards: 1,
             dispatch: DispatchPolicy::JoinShortestQueue,
             steal: StealPolicy::None,
+            reference: false,
         }
     }
 }
@@ -174,17 +179,21 @@ pub fn make_policy(cfg: &ExpConfig, table: Arc<LatencyTable>) -> Box<dyn Batcher
         )),
         PolicyCfg::Lazy => {
             let cap = cfg.max_batch.min(table.saturation_batch(0.02));
-            Box::new(LazyBatching::new(
-                table,
-                cfg.sla,
-                dec,
-                SlackMode::Conservative,
-                cap,
-            ))
+            let lazy = LazyBatching::new(table, cfg.sla, dec, SlackMode::Conservative, cap);
+            Box::new(if cfg.reference {
+                lazy.with_reference_slack()
+            } else {
+                lazy
+            })
         }
         PolicyCfg::Oracle => {
             let cap = cfg.max_batch.min(table.saturation_batch(0.02));
-            Box::new(LazyBatching::new(table, cfg.sla, dec, SlackMode::Oracle, cap))
+            let lazy = LazyBatching::new(table, cfg.sla, dec, SlackMode::Oracle, cap);
+            Box::new(if cfg.reference {
+                lazy.with_reference_slack()
+            } else {
+                lazy
+            })
         }
     }
 }

@@ -31,7 +31,9 @@ use lazybatching::npu::systolic::SystolicModel;
 #[cfg(feature = "real")]
 use lazybatching::server::{self, ServeConfig, ServePolicy, ServeRequest};
 use lazybatching::sim::{DispatchPolicy, StealPolicy};
-use lazybatching::telemetry::{perfetto, registry::ns_to_ms, RecordingTracer, TracerRef};
+use lazybatching::telemetry::{
+    fanout, perfetto, registry::ns_to_ms, JsonlWriter, RecordingTracer, TracerRef,
+};
 use lazybatching::traffic::PoissonArrivals;
 use lazybatching::util::cli::Args;
 use lazybatching::util::json::Json;
@@ -78,10 +80,11 @@ fn print_help() {
          \x20          [--steal <none|idle-pull|slack-aware>]\n\
          trace      --workload W --policy P [--rate R] [--sla MS] [--duration S]\n\
          \x20          [--seed N] [--out FILE.json] [--limit N] [--trace-cap N]\n\
-         \x20          [--shards N] [--dispatch <rr|jsq|p2c>]\n\
+         \x20          [--trace-out FILE.jsonl] [--shards N] [--dispatch <rr|jsq|p2c>]\n\
          \x20          [--steal <none|idle-pull|slack-aware>]\n\
          \x20          (Perfetto/chrome://tracing export + per-request timelines;\n\
-         \x20           with --shards > 1, one processor track per shard)\n\
+         \x20           with --shards > 1, one processor track per shard;\n\
+         \x20           --trace-out streams every event as JSONL during the run)\n\
          serve      [--artifacts DIR] [--rate R] [--requests N] [--sla MS]\n\
          \x20          [--policy <lazy|graphb|serial>] [--btw MS] [--max-batch B]\n\
          \x20          (requires a binary built with --features real)\n\
@@ -253,10 +256,26 @@ fn cmd_trace(args: &Args) -> Result<()> {
             RecordingTracer::new()
         }
     };
+    // --trace-out additionally streams every event (global request ids,
+    // unbounded, constant memory) as JSONL while the run executes
+    let trace_out = args.get("trace-out").map(|p| p.to_string());
+    let jsonl: Option<Arc<JsonlWriter>> = match &trace_out {
+        Some(p) => Some(JsonlWriter::create(p)?),
+        None => None,
+    };
+    let tee = |rec: TracerRef| -> TracerRef {
+        match &jsonl {
+            Some(w) => fanout(vec![rec, w.clone() as TracerRef]),
+            None => rec,
+        }
+    };
     let table = exp::make_table(cfg.workload, cfg.device, cfg.max_batch);
     let (result, events, dropped) = if cfg.shards > 1 {
         let recs: Vec<Arc<RecordingTracer>> = (0..cfg.shards).map(|_| new_rec()).collect();
-        let tracers: Vec<TracerRef> = recs.iter().map(|r| r.clone() as TracerRef).collect();
+        let tracers: Vec<TracerRef> = recs
+            .iter()
+            .map(|r| tee(r.clone() as TracerRef))
+            .collect();
         let run = exp::run_sharded_traced(&cfg, table, seed, &tracers);
         let streams: Vec<_> = recs.iter().map(|r| r.take()).collect();
         let dropped: u64 = recs.iter().map(|r| r.dropped_events()).sum();
@@ -284,13 +303,17 @@ fn cmd_trace(args: &Args) -> Result<()> {
         (run.merged, events, dropped)
     } else {
         let rec = new_rec();
-        let tracer: TracerRef = rec.clone();
+        let tracer = tee(rec.clone() as TracerRef);
         let result = exp::run_once_traced(&cfg, table, seed, &tracer);
         let dropped = rec.dropped_events();
         let events = rec.take();
         std::fs::write(&out, perfetto::chrome_trace(&events).render())?;
         (result, events, dropped)
     };
+    if let (Some(w), Some(p)) = (&jsonl, &trace_out) {
+        w.flush()?;
+        println!("streamed {} JSONL events -> {p}", w.lines_written());
+    }
     println!(
         "{} / {} @ {} req/s: {} events for {} requests -> {out}\n\
          (open in ui.perfetto.dev or chrome://tracing)\n",

@@ -21,35 +21,40 @@ pub const WMT_MEAN_IN: usize = 18;
 pub const WMT_MEAN_OUT: usize = 17;
 
 /// Profiled `NodeLatency(node, batch)` table for one model on one device.
+///
+/// Storage is a single dense `nodes × max_batch` array indexed
+/// arithmetically (`node * max_batch + batch - 1`) so the event loop's
+/// per-event lookups touch one contiguous allocation with no pointer
+/// chasing. Per-class batch-1 suffix sums make the slack predictor's
+/// remaining-time query O(1) instead of O(nodes).
 pub struct LatencyTable {
     pub graph: Arc<ModelGraph>,
-    /// `lat[node][batch-1]` in ns, `batch` in `1..=max_batch`.
-    lat: Vec<Vec<Nanos>>,
+    /// `lat[node * max_batch + batch - 1]` in ns, `batch` in `1..=max_batch`.
+    lat: Vec<Nanos>,
     pub max_batch: usize,
+    /// Batch-1 latency summed over nodes `i..` of each class
+    /// (`len == nodes + 1`, last element 0). Remaining time from `tpos`
+    /// is then `sfx_static + in_len·sfx_enc + dec_bound·sfx_dec` — the
+    /// same integer sum [`Self::remaining_exec_time_scan`] computes
+    /// term-by-term, so the two are byte-identical.
+    sfx_static: Vec<Nanos>,
+    sfx_enc: Vec<Nanos>,
+    sfx_dec: Vec<Nanos>,
 }
 
 impl LatencyTable {
     /// Profile `graph` on `device` for batch sizes `1..=max_batch`.
     pub fn profile(graph: Arc<ModelGraph>, device: &dyn CostModel, max_batch: usize) -> LatencyTable {
         assert!(max_batch >= 1);
-        let lat = graph
-            .nodes
-            .iter()
-            .map(|node| {
-                (1..=max_batch)
-                    .map(|b| {
-                        let gemms: Vec<GemmShape> =
-                            node.gemms.iter().map(|g| g.at_batch(b)).collect();
-                        device.node_time_ns(&gemms, node.vec_elems_per_item * b as u64)
-                    })
-                    .collect()
-            })
-            .collect();
-        LatencyTable {
-            graph,
-            lat,
-            max_batch,
+        let mut lat = Vec::with_capacity(graph.nodes.len() * max_batch);
+        for node in &graph.nodes {
+            for b in 1..=max_batch {
+                let gemms: Vec<GemmShape> =
+                    node.gemms.iter().map(|g| g.at_batch(b)).collect();
+                lat.push(device.node_time_ns(&gemms, node.vec_elems_per_item * b as u64));
+            }
         }
+        LatencyTable::finish(graph, lat, max_batch)
     }
 
     /// Build a table from externally measured rows (`rows[node][batch-1]`
@@ -60,10 +65,36 @@ impl LatencyTable {
         for r in &rows {
             assert_eq!(r.len(), max_batch);
         }
+        let lat = rows.into_iter().flatten().collect();
+        LatencyTable::finish(graph, lat, max_batch)
+    }
+
+    /// Shared constructor tail: store the dense array and precompute the
+    /// per-class batch-1 suffix sums.
+    fn finish(graph: Arc<ModelGraph>, lat: Vec<Nanos>, max_batch: usize) -> LatencyTable {
+        let n = graph.nodes.len();
+        debug_assert_eq!(lat.len(), n * max_batch);
+        let mut sfx_static = vec![0; n + 1];
+        let mut sfx_enc = vec![0; n + 1];
+        let mut sfx_dec = vec![0; n + 1];
+        for i in (0..n).rev() {
+            let l = lat[i * max_batch];
+            sfx_static[i] = sfx_static[i + 1];
+            sfx_enc[i] = sfx_enc[i + 1];
+            sfx_dec[i] = sfx_dec[i + 1];
+            match graph.nodes[i].class {
+                NodeClass::Static => sfx_static[i] += l,
+                NodeClass::Encoder => sfx_enc[i] += l,
+                NodeClass::Decoder => sfx_dec[i] += l,
+            }
+        }
         LatencyTable {
             graph,
-            lat: rows,
+            lat,
             max_batch,
+            sfx_static,
+            sfx_enc,
+            sfx_dec,
         }
     }
 
@@ -72,7 +103,7 @@ impl LatencyTable {
     #[inline]
     pub fn node_latency(&self, node_idx: usize, batch: usize) -> Nanos {
         let b = batch.clamp(1, self.max_batch);
-        self.lat[node_idx][b - 1]
+        self.lat[node_idx * self.max_batch + b - 1]
     }
 
     /// Algorithm 1: graph-wide single-input inference time estimate.
@@ -82,23 +113,44 @@ impl LatencyTable {
     /// * decoder nodes `× dec_timesteps` (the statically-chosen coverage
     ///   bound, *not* the unknown true output length).
     pub fn single_input_exec_time(&self, enc_timesteps: usize, dec_timesteps: usize) -> Nanos {
-        let mut total: Nanos = 0;
-        for (i, node) in self.graph.nodes.iter().enumerate() {
-            let l = self.node_latency(i, 1);
-            total += match node.class {
-                NodeClass::Static => l,
-                NodeClass::Encoder => l * enc_timesteps.max(1) as Nanos,
-                NodeClass::Decoder => l * dec_timesteps.max(1) as Nanos,
-            };
-        }
-        total
+        self.sfx_static[0]
+            + self.sfx_enc[0] * enc_timesteps.max(1) as Nanos
+            + self.sfx_dec[0] * dec_timesteps.max(1) as Nanos
     }
 
     /// Remaining serial execution time from a given cursor position, with
     /// decoder repeat counts taken from `dec_bound` (conservative bound)
     /// and encoder repeats from the *known* input length. Used by the
-    /// slack predictor for in-flight requests.
+    /// slack predictor for in-flight requests — once per admission
+    /// decision per request, so this is O(1) via the suffix sums.
+    #[inline]
     pub fn remaining_exec_time(
+        &self,
+        tpos: usize,
+        step: usize,
+        in_len: usize,
+        dec_bound: usize,
+    ) -> Nanos {
+        if tpos >= self.graph.nodes.len() {
+            return 0;
+        }
+        let total = self.sfx_static[tpos]
+            + self.sfx_enc[tpos] * in_len.max(1) as Nanos
+            + self.sfx_dec[tpos] * dec_bound.max(1) as Nanos;
+        let rep = match self.graph.nodes[tpos].class {
+            NodeClass::Static => 1,
+            NodeClass::Encoder => in_len.max(1),
+            NodeClass::Decoder => dec_bound.max(1),
+        };
+        total - self.node_latency(tpos, 1) * step.min(rep) as Nanos
+    }
+
+    /// Reference implementation of [`Self::remaining_exec_time`]: the
+    /// original O(nodes) term-by-term scan. Kept as the golden oracle the
+    /// suffix-sum fast path is asserted byte-identical against (see
+    /// `tests/golden_engine.rs` and the unit test below) and as the
+    /// baseline side of the `perf_engine` bench.
+    pub fn remaining_exec_time_scan(
         &self,
         tpos: usize,
         step: usize,
@@ -264,6 +316,27 @@ mod tests {
         let last = t.graph.nodes.len() - 1;
         let rep_last = dec_bound; // proj is a decoder node
         assert_eq!(t.remaining_exec_time(last, rep_last, 12, dec_bound), 0);
+    }
+
+    #[test]
+    fn remaining_time_fast_path_matches_scan_reference() {
+        // the suffix-sum O(1) path must reproduce the term-by-term scan
+        // bit-for-bit for every cursor position, step and length bound
+        for w in [Workload::ResNet, Workload::Gnmt, Workload::Transformer] {
+            let t = table(w);
+            for tpos in 0..=t.graph.nodes.len() {
+                for step in [0usize, 1, 3, 17, 32, 1000] {
+                    for (in_len, dec) in [(0usize, 0usize), (1, 1), (12, 32), (40, 7)] {
+                        assert_eq!(
+                            t.remaining_exec_time(tpos, step, in_len, dec),
+                            t.remaining_exec_time_scan(tpos, step, in_len, dec),
+                            "{}: tpos={tpos} step={step} in={in_len} dec={dec}",
+                            w.name()
+                        );
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -148,6 +148,9 @@ impl SimEngine {
         let mut makespan = 0;
         let mut queue_wait_hist = Histogram::queue_wait();
         let mut batch_size_hist = Histogram::batch_size();
+        // scratch buffers reused across events (cleared, never re-allocated)
+        let mut released: Vec<ReqId> = Vec::new();
+        let mut transitions_buf: Vec<Transition> = Vec::new();
 
         while released_count < total {
             // ---- pick the earliest event ----
@@ -183,11 +186,16 @@ impl SimEngine {
                         padded: exec.padded,
                     });
                 }
-                let transitions = self.advance_cursors(&mut reqs, &exec);
-                let completion = Completion { exec, transitions };
-                let mut released = Vec::new();
+                self.advance_cursors_into(&mut reqs, &exec, &mut transitions_buf);
+                let completion = Completion {
+                    exec,
+                    transitions: std::mem::take(&mut transitions_buf),
+                };
+                released.clear();
                 policy.on_complete(now, &reqs, &completion, &mut released);
-                for id in released {
+                // reclaim the transitions buffer for the next completion
+                transitions_buf = completion.transitions;
+                for &id in &released {
                     let st = reqs.get_mut(id);
                     assert!(st.done, "policy released unfinished request {id}");
                     assert!(!st.released, "double release of request {id}");
@@ -274,6 +282,19 @@ impl SimEngine {
     /// Advance each member's cursor past one execution of `exec.tpos`.
     pub(crate) fn advance_cursors(&self, reqs: &mut Reqs, exec: &Exec) -> Vec<Transition> {
         let mut transitions = Vec::with_capacity(exec.reqs.len());
+        self.advance_cursors_into(reqs, exec, &mut transitions);
+        transitions
+    }
+
+    /// [`SimEngine::advance_cursors`] writing into a caller-owned scratch
+    /// buffer (cleared first) so the hot event loop allocates nothing.
+    pub(crate) fn advance_cursors_into(
+        &self,
+        reqs: &mut Reqs,
+        exec: &Exec,
+        transitions: &mut Vec<Transition>,
+    ) {
+        transitions.clear();
         // all members share a model (validated at issue time)
         let model = reqs.get(exec.reqs[0]).spec.model_idx;
         let graph = &self.tables[model].graph;
@@ -304,7 +325,6 @@ impl SimEngine {
                 }
             }
         }
-        transitions
     }
 
     /// Reject malformed executions loudly.

@@ -308,6 +308,10 @@ pub(crate) struct ShardCore<'e> {
     makespan: Nanos,
     queue_wait_hist: Histogram,
     batch_size_hist: Histogram,
+    /// Scratch buffers reused across completions (cleared, never
+    /// re-allocated) — mirrors the single-engine hot loop.
+    released_buf: Vec<ReqId>,
+    transitions_buf: Vec<crate::coordinator::policy::Transition>,
 }
 
 impl<'e> ShardCore<'e> {
@@ -340,6 +344,8 @@ impl<'e> ShardCore<'e> {
             makespan: 0,
             queue_wait_hist: Histogram::queue_wait(),
             batch_size_hist: Histogram::batch_size(),
+            released_buf: Vec::new(),
+            transitions_buf: Vec::new(),
         }
     }
 
@@ -385,13 +391,18 @@ impl<'e> ShardCore<'e> {
                 padded: exec.padded,
             });
         }
-        let transitions = self.eng.advance_cursors(&mut self.reqs, &exec);
-        let completion = Completion { exec, transitions };
-        let mut released = Vec::new();
+        self.eng
+            .advance_cursors_into(&mut self.reqs, &exec, &mut self.transitions_buf);
+        let completion = Completion {
+            exec,
+            transitions: std::mem::take(&mut self.transitions_buf),
+        };
+        self.released_buf.clear();
+        let mut released = std::mem::take(&mut self.released_buf);
         self.policy
             .on_complete(t, &self.reqs, &completion, &mut released);
         let n = released.len();
-        for id in released {
+        for &id in &released {
             let st = self.reqs.get_mut(id);
             assert!(st.done, "policy released unfinished request {id}");
             assert!(!st.released, "double release of request {id}");
@@ -411,6 +422,9 @@ impl<'e> ShardCore<'e> {
             self.released += 1;
             self.makespan = t;
         }
+        // reclaim both scratch buffers for the next completion
+        self.released_buf = released;
+        self.transitions_buf = completion.transitions;
         n
     }
 
@@ -445,6 +459,12 @@ impl<'e> ShardCore<'e> {
     /// thief, FIFO order.
     fn revocable(&self) -> Vec<ReqId> {
         self.policy.revocable()
+    }
+
+    /// Backlog depth the steal pass ranks victims by, without
+    /// materializing the id list ([`Batcher::revocable_len`]).
+    fn revocable_len(&self) -> usize {
+        self.policy.revocable_len()
     }
 
     /// Remove a queued request for migration. Returns its spec — global
@@ -911,7 +931,7 @@ impl ShardedEngine {
                 if v == thief {
                     continue;
                 }
-                let d = core.revocable().len();
+                let d = core.revocable_len();
                 if d > best_depth {
                     best_depth = d;
                     victim = v;

@@ -1,0 +1,361 @@
+//! Streaming JSONL trace export: one JSON object per line, written the
+//! moment each event is recorded.
+//!
+//! [`RecordingTracer`](super::RecordingTracer) buffers everything in
+//! memory and is the right tool for bounded experiments that export once
+//! at the end (Perfetto). Long `serve` runs and huge traces need the
+//! opposite: constant memory, events on disk as they happen, a file that
+//! is useful even if the process dies mid-run. [`JsonlWriter`] is that
+//! sink — a [`Tracer`] whose `record` renders the event as one compact
+//! JSON line into a buffered writer.
+//!
+//! Each line is self-describing: `{"kind":"<tag>", ...}` with the same
+//! field names as the [`Event`] variants and the kind tags of
+//! [`Event::kind`]. Consumers `grep`/`jq` the stream without schema
+//! negotiation:
+//!
+//! ```text
+//! jq -c 'select(.kind == "release") | .latency' trace.jsonl
+//! ```
+
+use std::fs::File;
+use std::io::{self, BufWriter, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::event::Event;
+use super::tracer::Tracer;
+use crate::util::json::Json;
+
+/// Render one event as a single-line JSON object (no trailing newline).
+///
+/// Field names mirror the [`Event`] variant fields; `kind` carries the
+/// [`Event::kind`] tag; absent optionals render as `null`.
+pub fn event_json(ev: &Event) -> Json {
+    let ids = |v: &[crate::coordinator::policy::ReqId]| {
+        Json::Arr(v.iter().map(|&x| Json::Int(x as i64)).collect())
+    };
+    let j = Json::obj().set("kind", ev.kind());
+    match ev {
+        Event::RunStart { policy } => j.set("policy", policy.as_str()),
+        Event::Arrival {
+            t,
+            req,
+            model,
+            in_len,
+            out_len,
+        } => j
+            .set("t", *t)
+            .set("req", *req)
+            .set("model", *model)
+            .set("in_len", *in_len)
+            .set("out_len", *out_len),
+        Event::Admitted { t, reqs, preempting } => j
+            .set("t", *t)
+            .set("reqs", ids(reqs))
+            .set("preempting", *preempting),
+        Event::Denied { t, pending, reason } => j
+            .set("t", *t)
+            .set("pending", *pending)
+            .set("reason", reason.as_str()),
+        Event::SlackEstimate {
+            t,
+            reqs,
+            predicted_slack,
+        } => j
+            .set("t", *t)
+            .set("reqs", ids(reqs))
+            .set("predicted_slack", *predicted_slack),
+        Event::Merge {
+            t,
+            merged,
+            depth_after,
+        } => j
+            .set("t", *t)
+            .set("merged", *merged)
+            .set("depth_after", *depth_after),
+        Event::Preempt {
+            t,
+            preempted,
+            admitted,
+        } => j
+            .set("t", *t)
+            .set("preempted", ids(preempted))
+            .set("admitted", ids(admitted)),
+        Event::Stall { t, until, queued } => j
+            .set("t", *t)
+            .set("until", until.map(Json::from).unwrap_or(Json::Null))
+            .set("queued", *queued),
+        Event::NodeExec {
+            start,
+            dur,
+            tpos,
+            members,
+            padded,
+        } => j
+            .set("start", *start)
+            .set("dur", *dur)
+            .set("tpos", *tpos)
+            .set("members", ids(members))
+            .set("padded", *padded),
+        Event::Release {
+            t,
+            req,
+            latency,
+            queue_wait,
+        } => j
+            .set("t", *t)
+            .set("req", *req)
+            .set("latency", *latency)
+            .set("queue_wait", *queue_wait),
+        Event::Migrate {
+            t,
+            req,
+            from_shard,
+            to_shard,
+            slack,
+        } => j
+            .set("t", *t)
+            .set("req", *req)
+            .set("from_shard", *from_shard)
+            .set("to_shard", *to_shard)
+            .set("slack", *slack),
+    }
+}
+
+/// A [`Tracer`] that streams every event as one JSON line.
+///
+/// Writes go through an internal [`BufWriter`] under a mutex (one traced
+/// run has two writers — engine and policy — behind one shared
+/// [`TracerRef`](super::TracerRef), and sharded runs may share a single
+/// sink across shards). Call [`JsonlWriter::flush`] before reading the
+/// file; dropping the writer also flushes.
+pub struct JsonlWriter {
+    out: Mutex<BufWriter<Box<dyn Write + Send>>>,
+    written: AtomicU64,
+}
+
+impl JsonlWriter {
+    /// Stream to a freshly created (truncated) file at `path`.
+    pub fn create(path: impl AsRef<Path>) -> io::Result<Arc<JsonlWriter>> {
+        let f = File::create(path)?;
+        Ok(JsonlWriter::from_writer(Box::new(f)))
+    }
+
+    /// Stream to an arbitrary sink (tests, sockets, stdout).
+    pub fn from_writer(w: Box<dyn Write + Send>) -> Arc<JsonlWriter> {
+        Arc::new(JsonlWriter {
+            out: Mutex::new(BufWriter::new(w)),
+            written: AtomicU64::new(0),
+        })
+    }
+
+    /// Lines successfully written so far.
+    pub fn lines_written(&self) -> u64 {
+        self.written.load(Ordering::Relaxed)
+    }
+
+    /// Flush buffered lines to the underlying sink.
+    pub fn flush(&self) -> io::Result<()> {
+        self.out.lock().unwrap().flush()
+    }
+}
+
+impl Tracer for JsonlWriter {
+    fn enabled(&self) -> bool {
+        true
+    }
+
+    fn record(&self, ev: Event) {
+        let line = event_json(&ev).render();
+        let mut out = self.out.lock().unwrap();
+        // an export error must not kill the run; the line count makes the
+        // shortfall visible to whoever checks it
+        if writeln!(out, "{line}").is_ok() {
+            self.written.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::TracerRef;
+
+    /// A test sink capturing bytes behind the same shared handle the
+    /// writer owns.
+    #[derive(Clone, Default)]
+    struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+
+    impl Write for SharedBuf {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            self.0.lock().unwrap().extend_from_slice(buf);
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn streams_one_line_per_event() {
+        let buf = SharedBuf::default();
+        let w = JsonlWriter::from_writer(Box::new(buf.clone()));
+        let tracer: TracerRef = w.clone();
+        assert!(tracer.enabled());
+        tracer.record(Event::RunStart {
+            policy: "LazyB".into(),
+        });
+        tracer.record(Event::Arrival {
+            t: 5,
+            req: 1,
+            model: 0,
+            in_len: 4,
+            out_len: 2,
+        });
+        tracer.record(Event::Stall {
+            t: 6,
+            until: None,
+            queued: 3,
+        });
+        tracer.record(Event::Release {
+            t: 9,
+            req: 1,
+            latency: 4,
+            queue_wait: 1,
+        });
+        w.flush().unwrap();
+        assert_eq!(w.lines_written(), 4);
+        let bytes = buf.0.lock().unwrap().clone();
+        let text = String::from_utf8(bytes).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert_eq!(lines[0], r#"{"kind":"run_start","policy":"LazyB"}"#);
+        assert_eq!(
+            lines[1],
+            r#"{"kind":"arrival","t":5,"req":1,"model":0,"in_len":4,"out_len":2}"#
+        );
+        assert_eq!(lines[2], r#"{"kind":"stall","t":6,"until":null,"queued":3}"#);
+        assert_eq!(
+            lines[3],
+            r#"{"kind":"release","t":9,"req":1,"latency":4,"queue_wait":1}"#
+        );
+    }
+
+    #[test]
+    fn every_event_variant_renders_with_its_kind_tag() {
+        use crate::telemetry::DenyReason;
+        let events = vec![
+            Event::RunStart { policy: "x".into() },
+            Event::Arrival {
+                t: 1,
+                req: 0,
+                model: 0,
+                in_len: 1,
+                out_len: 1,
+            },
+            Event::Admitted {
+                t: 2,
+                reqs: vec![0, 1],
+                preempting: true,
+            },
+            Event::Denied {
+                t: 3,
+                pending: 2,
+                reason: DenyReason::SlackExhausted,
+            },
+            Event::SlackEstimate {
+                t: 4,
+                reqs: vec![0],
+                predicted_slack: -12,
+            },
+            Event::Merge {
+                t: 5,
+                merged: 1,
+                depth_after: 2,
+            },
+            Event::Preempt {
+                t: 6,
+                preempted: vec![0],
+                admitted: vec![1],
+            },
+            Event::Stall {
+                t: 7,
+                until: Some(9),
+                queued: 1,
+            },
+            Event::NodeExec {
+                start: 8,
+                dur: 2,
+                tpos: 3,
+                members: vec![0, 1],
+                padded: false,
+            },
+            Event::Release {
+                t: 10,
+                req: 0,
+                latency: 9,
+                queue_wait: 1,
+            },
+            Event::Migrate {
+                t: 11,
+                req: 1,
+                from_shard: 0,
+                to_shard: 2,
+                slack: -3,
+            },
+        ];
+        for ev in &events {
+            let line = event_json(ev).render();
+            assert!(
+                line.starts_with(&format!(r#"{{"kind":"{}""#, ev.kind())),
+                "{line}"
+            );
+            // integer timestamps must render as integers, not floats
+            assert!(!line.contains(".0"), "{line}");
+        }
+        // the slack-aware fields keep their signs
+        let mig = event_json(&events[10]).render();
+        assert!(mig.contains(r#""slack":-3"#), "{mig}");
+        let se = event_json(&events[4]).render();
+        assert!(se.contains(r#""predicted_slack":-12"#), "{se}");
+    }
+
+    #[test]
+    fn traced_run_streams_the_full_lifecycle() {
+        use crate::coordinator::{LazyBatching, SlackMode};
+        use crate::model::workloads::Workload;
+        use crate::model::LatencyTable;
+        use crate::npu::systolic::SystolicModel;
+        use crate::sim::{SimConfig, SimEngine};
+        use crate::traffic::Trace;
+        use crate::{MS, SEC};
+        use std::sync::Arc as StdArc;
+
+        let t = StdArc::new(LatencyTable::profile(
+            StdArc::new(Workload::ResNet.graph()),
+            &SystolicModel::default_npu(),
+            64,
+        ));
+        let trace = Trace::generate(&t.graph, 200.0, SEC / 4, 11);
+        let engine = SimEngine::single(t.clone(), SimConfig::default());
+        let mut policy = LazyBatching::with_defaults(t, 100 * MS, SlackMode::Conservative);
+        let buf = SharedBuf::default();
+        let w = JsonlWriter::from_writer(Box::new(buf.clone()));
+        let tracer: TracerRef = w.clone();
+        let r = engine.run_traced(&trace, &mut policy, &tracer);
+        w.flush().unwrap();
+        let bytes = buf.0.lock().unwrap().clone();
+        let text = String::from_utf8(bytes).unwrap();
+        let count = |kind: &str| {
+            let tag = format!(r#"{{"kind":"{kind}""#);
+            text.lines().filter(|l| l.starts_with(&tag)).count()
+        };
+        assert_eq!(count("run_start"), 1);
+        assert_eq!(count("arrival"), trace.requests.len());
+        assert_eq!(count("release"), trace.requests.len());
+        assert_eq!(count("node_exec") as u64, r.node_execs);
+        assert_eq!(w.lines_written() as usize, text.lines().count());
+    }
+}

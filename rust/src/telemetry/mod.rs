@@ -24,6 +24,9 @@
 //!   (with [`event::DenyReason`]), queue-wait, node execution (policy,
 //!   node id, batch size, members, start/duration in ns), stall / merge /
 //!   preempt decisions, the lazy policy's slack estimate, and release.
+//! * [`jsonl`] — streaming JSONL export ([`JsonlWriter`]): one JSON
+//!   object per line, written the moment each event is recorded —
+//!   constant memory for unbounded runs (`--trace-out` on the CLI).
 //! * [`perfetto`] — Chrome trace-event JSON export (loads in
 //!   `ui.perfetto.dev` / `chrome://tracing`): one track per request, one
 //!   for the processor, instant markers for scheduling decisions, and a
@@ -55,10 +58,12 @@
 //! ```
 
 pub mod event;
+pub mod jsonl;
 pub mod perfetto;
 pub mod registry;
 pub mod tracer;
 
 pub use event::{DenyReason, Event};
+pub use jsonl::JsonlWriter;
 pub use registry::{Histogram, Registry};
-pub use tracer::{noop, NoopTracer, RecordingTracer, Tracer, TracerRef};
+pub use tracer::{fanout, noop, NoopTracer, RecordingTracer, Tracer, TracerRef};

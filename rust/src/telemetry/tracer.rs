@@ -54,6 +54,40 @@ pub fn noop() -> TracerRef {
     Arc::new(NoopTracer)
 }
 
+/// Forwards every event to each enabled sink — e.g. a
+/// [`RecordingTracer`] for Perfetto export *and* a streaming
+/// [`crate::telemetry::JsonlWriter`] in the same run. Enabled if any
+/// sink is; events are cloned only for the extra enabled sinks.
+pub struct FanoutTracer {
+    sinks: Vec<TracerRef>,
+}
+
+/// A shared handle fanning out to `sinks`.
+pub fn fanout(sinks: Vec<TracerRef>) -> TracerRef {
+    Arc::new(FanoutTracer { sinks })
+}
+
+impl Tracer for FanoutTracer {
+    fn enabled(&self) -> bool {
+        self.sinks.iter().any(|t| t.enabled())
+    }
+
+    fn record(&self, ev: Event) {
+        let mut pending = Some(ev);
+        let last_enabled = self.sinks.iter().rposition(|t| t.enabled());
+        for (i, t) in self.sinks.iter().enumerate() {
+            if !t.enabled() {
+                continue;
+            }
+            if Some(i) == last_enabled {
+                t.record(pending.take().unwrap());
+            } else {
+                t.record(pending.clone().unwrap());
+            }
+        }
+    }
+}
+
 /// Buffers events in memory for later export.
 ///
 /// [`RecordingTracer::new`] keeps everything (fine for bounded
@@ -211,6 +245,22 @@ mod tests {
         rec.record(arrival(10));
         assert_eq!(rec.len(), 1);
         assert_eq!(rec.dropped_events(), 7);
+    }
+
+    #[test]
+    fn fanout_forwards_to_every_enabled_sink() {
+        let a = RecordingTracer::new();
+        let b = RecordingTracer::new();
+        let tee = fanout(vec![noop(), a.clone() as TracerRef, b.clone() as TracerRef]);
+        assert!(tee.enabled());
+        tee.record(arrival(1));
+        tee.record(arrival(2));
+        assert_eq!(a.len(), 2);
+        assert_eq!(b.len(), 2);
+        assert_eq!(a.take(), b.take());
+        // all-noop fanout is disabled (emission sites skip event builds)
+        assert!(!fanout(vec![noop(), noop()]).enabled());
+        assert!(!fanout(Vec::new()).enabled());
     }
 
     #[test]

@@ -1,0 +1,180 @@
+//! Golden byte-identity tests for the optimized engine hot path.
+//!
+//! The PR-9 optimizations — O(1) suffix-sum remaining-time, the epoch
+//! slack cache, indexed request state, and the zero-allocation event
+//! loop — must not change a single byte of any result. These tests pin
+//! the optimized path against the in-tree reference slack path
+//! (`ExpConfig::reference`: full per-node latency scans, cache
+//! bypassed) across every workload × policy × dispatch × steal
+//! combination at two seeds, and across worker counts.
+
+use lazybatching::exp::{self, ExpConfig, PolicyCfg};
+use lazybatching::model::Workload;
+use lazybatching::sim::{DispatchPolicy, StealPolicy};
+use lazybatching::SEC;
+
+const WORKLOADS: [Workload; 2] = [Workload::ResNet, Workload::Gnmt];
+const POLICIES: [PolicyCfg; 4] = [
+    PolicyCfg::Serial,
+    PolicyCfg::GraphB(35),
+    PolicyCfg::Lazy,
+    PolicyCfg::Oracle,
+];
+const SEEDS: [u64; 2] = [0xBA7C4, 0xDEAD111];
+
+fn rendered(cfg: &ExpConfig) -> String {
+    exp::run(cfg).to_json(cfg.sla).render()
+}
+
+/// Optimized and reference paths must agree byte-for-byte on the full
+/// rendered aggregate (latency statistics, histograms, and every policy
+/// counter — so admission decisions are pinned too, not just latencies).
+fn assert_golden(cfg: &ExpConfig, label: &str) {
+    let opt = rendered(cfg);
+    let refr = rendered(&ExpConfig {
+        reference: true,
+        ..cfg.clone()
+    });
+    assert_eq!(opt, refr, "optimized != reference: {label}");
+}
+
+#[test]
+fn golden_single_shard_all_policies_two_seeds() {
+    for w in WORKLOADS {
+        for p in POLICIES {
+            for seed in SEEDS {
+                let cfg = ExpConfig {
+                    workload: w,
+                    policy: p,
+                    rate: 400.0,
+                    duration: SEC / 4,
+                    runs: 2,
+                    seed,
+                    ..ExpConfig::default()
+                };
+                assert_golden(&cfg, &format!("{}/{}/seed={seed:#x}", w.name(), p.name()));
+            }
+        }
+    }
+}
+
+#[test]
+fn golden_sharded_all_dispatch_and_steal_combinations() {
+    for w in WORKLOADS {
+        for p in POLICIES {
+            for dispatch in [DispatchPolicy::JoinShortestQueue, DispatchPolicy::RoundRobin] {
+                for steal in [StealPolicy::None, StealPolicy::SlackAware] {
+                    for seed in SEEDS {
+                        let cfg = ExpConfig {
+                            workload: w,
+                            policy: p,
+                            rate: 400.0,
+                            duration: SEC / 4,
+                            runs: 1,
+                            seed,
+                            shards: 2,
+                            dispatch,
+                            steal,
+                            ..ExpConfig::default()
+                        };
+                        assert_golden(
+                            &cfg,
+                            &format!(
+                                "{}/{}/{}/{}/seed={seed:#x}",
+                                w.name(),
+                                p.name(),
+                                dispatch.name(),
+                                steal.name()
+                            ),
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn golden_across_worker_counts() {
+    // the LB_THREADS fan-out is only across seeds; both slack paths must
+    // render identically at any worker count
+    for reference in [false, true] {
+        let cfg = ExpConfig {
+            workload: Workload::Gnmt,
+            policy: PolicyCfg::Lazy,
+            rate: 500.0,
+            duration: SEC / 2,
+            runs: 4,
+            shards: 2,
+            dispatch: DispatchPolicy::RoundRobin,
+            steal: StealPolicy::SlackAware,
+            reference,
+            ..ExpConfig::default()
+        };
+        let serial = exp::run_threaded(&cfg, 1).to_json(cfg.sla).render();
+        let threaded = exp::run_threaded(&cfg, 4).to_json(cfg.sla).render();
+        assert_eq!(serial, threaded, "reference={reference}");
+    }
+    // and the two paths agree with each other at 4 workers
+    let base = ExpConfig {
+        workload: Workload::Gnmt,
+        policy: PolicyCfg::Lazy,
+        rate: 500.0,
+        duration: SEC / 2,
+        runs: 4,
+        shards: 2,
+        dispatch: DispatchPolicy::RoundRobin,
+        steal: StealPolicy::SlackAware,
+        ..ExpConfig::default()
+    };
+    let opt = exp::run_threaded(&base, 4).to_json(base.sla).render();
+    let refr = exp::run_threaded(
+        &ExpConfig {
+            reference: true,
+            ..base.clone()
+        },
+        4,
+    )
+    .to_json(base.sla)
+    .render();
+    assert_eq!(opt, refr);
+}
+
+#[test]
+fn slack_cache_never_changes_admission_decisions() {
+    // per-run decision counters, not just aggregate latencies: the epoch
+    // cache must admit/deny/preempt/merge exactly like a fresh predictor
+    for w in WORKLOADS {
+        for p in [PolicyCfg::Lazy, PolicyCfg::Oracle] {
+            let cfg = ExpConfig {
+                workload: w,
+                policy: p,
+                rate: 600.0,
+                duration: SEC / 2,
+                runs: 1,
+                ..ExpConfig::default()
+            };
+            let table = exp::make_table(cfg.workload, cfg.device, cfg.max_batch);
+            for seed in SEEDS {
+                let a = exp::run_once(&cfg, table.clone(), seed);
+                let b = exp::run_once(
+                    &ExpConfig {
+                        reference: true,
+                        ..cfg.clone()
+                    },
+                    table.clone(),
+                    seed,
+                );
+                let label = format!("{}/{}/seed={seed:#x}", w.name(), p.name());
+                assert_eq!(a.latencies, b.latencies, "{label}");
+                assert_eq!(a.node_execs, b.node_execs, "{label}");
+                assert_eq!(a.stats.admitted, b.stats.admitted, "{label}");
+                assert_eq!(a.stats.denied, b.stats.denied, "{label}");
+                assert_eq!(a.stats.preemptions, b.stats.preemptions, "{label}");
+                assert_eq!(a.stats.merges, b.stats.merges, "{label}");
+                assert_eq!(a.makespan, b.makespan, "{label}");
+                assert_eq!(a.busy, b.busy, "{label}");
+            }
+        }
+    }
+}

@@ -70,6 +70,46 @@ for p in doc["points"]:
         print(f"perf_engine {tag}: {rps:.0f} sim req/s (floor {floor:.0f})")
 sys.exit(1 if failed else 0)
 EOF
+    # smoke: fault injection + recovery end-to-end -> BENCH_chaos.json
+    # (repo root), then gate on NaN and on the no-lost-requests invariant
+    # recomputed from the aggregated counters: every admitted request is
+    # released, shed, or timed out — never silently dropped.
+    echo "== perf_chaos --json (BENCH_chaos.json + no-lost-requests gate)"
+    env LB_BENCH_RUNS=2 LB_BENCH_SECS=0.2 \
+        cargo bench --bench perf_chaos -- \
+        --shards 1,4 --intensity 0,1 --steal none --json > ../BENCH_chaos.json
+    if grep -qiw nan ../BENCH_chaos.json; then
+        echo "ci: NaN field in perf_chaos JSON output" >&2
+        grep -iw nan ../BENCH_chaos.json >&2
+        exit 1
+    fi
+    python3 - ../BENCH_chaos.json <<'EOF'
+import json, sys
+doc = json.load(open(sys.argv[1]))
+assert doc["bench"] == "perf_chaos", doc
+faulted = 0
+for p in doc["points"]:
+    c = p["counters"]
+    offered = c.get("offered", 0)
+    shed, timed_out = c.get("shed", 0), c.get("timed_out", 0)
+    tag = f'{p["policy"]}/shards={p["shards"]}/fault={p["fault"]}'
+    if p["fault"] == 0:
+        # fault-free points ride the untouched engine: no chaos counters
+        if offered or shed or timed_out:
+            print(f"ci: perf_chaos baseline {tag} carries chaos counters",
+                  file=sys.stderr)
+            sys.exit(1)
+        continue
+    got = p["requests"] + shed + timed_out
+    if offered == 0 or got != offered:
+        print(f"ci: perf_chaos lost requests: {tag}: released+shed+timed_out"
+              f"={got}, offered={offered}", file=sys.stderr)
+        sys.exit(1)
+    faulted += 1
+    print(f"perf_chaos {tag}: {p['requests']}/{offered} released, "
+          f"{shed} shed, {timed_out} timed out")
+assert faulted >= 6, f"expected >= 6 faulted points, saw {faulted}"
+EOF
 fi
 
 echo "ci: OK"

@@ -1,0 +1,185 @@
+//! **Perf / chaos** — SLA satisfaction under injected faults. Sweeps
+//! fault intensity × policy × steal at 1 and 4 shards over a GNMT trace,
+//! with the recovery contract on (deadline = 2×SLA, retry budget,
+//! SLA-aware shedding), and reports the fraction of *offered* requests
+//! served within the SLA relative to the fault-free baseline of the same
+//! configuration.
+//!
+//! The no-lost-requests invariant (`released + shed + timed_out ==
+//! offered`) is asserted inside the chaos event loop on every run and
+//! re-checked here from the aggregated counters, so a violation fails
+//! the bench before any number is printed.
+//!
+//! Flags: `--policies serial,lazy,graphb`, `--shards 1,4`,
+//! `--intensity 0,0.5,1,2` (0 is always run — it is the baseline),
+//! `--steal none,slack-aware` (applied at shards > 1 only),
+//! `--rate <req/s>`, `--retries <n>`, `--json` (full aggregate
+//! statistics per point → ci writes `BENCH_chaos.json`).
+
+use lazybatching::exp::{self, ExpConfig, FaultCfg, JsonReport, PolicyCfg};
+use lazybatching::model::Workload;
+use lazybatching::sim::{DispatchPolicy, RecoveryPolicy, StealPolicy};
+use lazybatching::util::cli::Args;
+use lazybatching::util::table::{f3, Table};
+use lazybatching::MS;
+
+fn policy_from_name(name: &str) -> PolicyCfg {
+    match name {
+        "serial" => PolicyCfg::Serial,
+        "lazy" => PolicyCfg::Lazy,
+        "graphb" => PolicyCfg::GraphB(35),
+        other => panic!("--policies: unknown policy {other:?} (serial|lazy|graphb)"),
+    }
+}
+
+fn main() {
+    let args = Args::from_env();
+    let mut report = JsonReport::from_args("perf_chaos");
+    let policies: Vec<PolicyCfg> = args
+        .get_or("policies", "serial,lazy,graphb")
+        .split(',')
+        .map(|p| policy_from_name(p.trim()))
+        .collect();
+    let shard_list: Vec<usize> = args
+        .get_or("shards", "1,4")
+        .split(',')
+        .map(|x| x.trim().parse().expect("--shards: expected integers"))
+        .collect();
+    assert!(shard_list.iter().all(|&s| s >= 1), "--shards: counts must be >= 1");
+    let mut intensities: Vec<f64> = args
+        .get_or("intensity", "0,0.5,1,2")
+        .split(',')
+        .map(|x| x.trim().parse().expect("--intensity: expected numbers"))
+        .collect();
+    assert!(
+        intensities.iter().all(|&i| i.is_finite() && i >= 0.0),
+        "--intensity: values must be finite and >= 0"
+    );
+    // intensity 0 is the fault-free baseline every other point is
+    // normalized against — always run it first
+    if !intensities.contains(&0.0) {
+        intensities.insert(0, 0.0);
+    }
+    intensities.sort_by(|a, b| a.total_cmp(b));
+    let steal_list: Vec<StealPolicy> = args
+        .get_or("steal", "none,slack-aware")
+        .split(',')
+        .map(|x| {
+            StealPolicy::from_name(x.trim())
+                .expect("--steal: expected none, idle-pull or slack-aware")
+        })
+        .collect();
+    let rate = args.get_f64("rate", 500.0).expect("--rate");
+    let retry_budget: u32 = args
+        .get_or("retries", "3")
+        .parse()
+        .expect("--retries: expected an integer");
+
+    let base = ExpConfig {
+        workload: Workload::Gnmt,
+        rate,
+        duration: exp::bench_duration(),
+        runs: exp::bench_runs(),
+        dispatch: DispatchPolicy::JoinShortestQueue,
+        ..ExpConfig::default()
+    };
+    let recovery = RecoveryPolicy {
+        retry_budget,
+        backoff: MS,
+        timeout: Some(2 * base.sla),
+        shed: true,
+    };
+
+    if !report.enabled() {
+        println!(
+            "perf_chaos — SLA satisfaction under faults @ {rate} req/s (GNMT, jsq, \
+             deadline {}ms, budget {retry_budget})",
+            2 * base.sla / MS
+        );
+    }
+
+    let mut t = Table::new(vec![
+        "policy", "shards", "steal", "fault", "sat", "vs_base", "shed", "timeout", "retry",
+    ]);
+    for &policy in &policies {
+        for &shards in &shard_list {
+            // steal only exists behind a multi-shard front-end
+            let steals: &[StealPolicy] = if shards > 1 { &steal_list } else { &[StealPolicy::None] };
+            for &steal in steals {
+                let mut baseline = f64::NAN;
+                for &intensity in &intensities {
+                    let cfg = ExpConfig {
+                        policy,
+                        shards,
+                        steal,
+                        fault: if intensity > 0.0 {
+                            FaultCfg { intensity, recovery }
+                        } else {
+                            FaultCfg::default() // pure fault-free baseline
+                        },
+                        ..base.clone()
+                    };
+                    cfg.validate().expect("bench config");
+                    let agg = exp::run(&cfg);
+                    let released = agg.pooled_ns.len() as u64;
+                    let shed = agg.stats.counter("shed");
+                    let timed_out = agg.stats.counter("timed_out");
+                    let offered = agg.stats.counter("offered");
+                    // the no-lost-requests invariant, re-checked from the
+                    // aggregated counters (fault-free runs never bump
+                    // `offered`: everything admitted is released)
+                    if cfg.fault.active() {
+                        assert_eq!(
+                            released + shed + timed_out,
+                            offered,
+                            "{} x{shards} @ {intensity}: chaos run lost requests",
+                            policy.name()
+                        );
+                    } else {
+                        assert_eq!(shed + timed_out, 0, "inert config shed/timed out");
+                    }
+                    let offered = if offered > 0 { offered } else { released };
+                    let within = released as f64 * (1.0 - agg.violation_rate(cfg.sla));
+                    let sat = if offered > 0 { within / offered as f64 } else { 1.0 };
+                    if intensity == 0.0 {
+                        baseline = sat;
+                    }
+                    let vs_base = if baseline > 0.0 { sat / baseline } else { 1.0 };
+                    t.row(vec![
+                        policy.name(),
+                        format!("{shards}"),
+                        steal.name().to_string(),
+                        format!("{intensity}"),
+                        f3(sat),
+                        f3(vs_base),
+                        format!("{shed}"),
+                        format!("{timed_out}"),
+                        format!("{}", agg.stats.counter("retries")),
+                    ]);
+                    report.push(
+                        agg.to_json(cfg.sla)
+                            .set("workload", cfg.workload.name())
+                            .set("rate", rate)
+                            .set("policy", policy.name())
+                            .set("shards", shards)
+                            .set("dispatch", cfg.dispatch.name())
+                            .set("steal", steal.name())
+                            .set("fault", intensity)
+                            .set("sla_satisfaction", sat)
+                            .set("sla_satisfaction_vs_baseline", vs_base),
+                    );
+                }
+            }
+        }
+    }
+
+    if report.enabled() {
+        report.print();
+    } else {
+        t.print();
+        println!(
+            "\nsat = released-within-SLA / offered; vs_base normalizes against the \
+             fault-free (fault=0) point of the same policy/shards/steal cell"
+        );
+    }
+}

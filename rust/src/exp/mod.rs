@@ -22,7 +22,8 @@ use crate::npu::gpu::GpuModel;
 use crate::npu::systolic::SystolicModel;
 use crate::npu::CostModel;
 use crate::sim::{
-    DispatchPolicy, RunResult, ShardRun, ShardedEngine, SimConfig, SimEngine, StealPolicy,
+    DispatchPolicy, FaultPlan, RecoveryPolicy, RunResult, ShardRun, ShardedEngine, SimConfig,
+    SimEngine, StealPolicy,
 };
 use crate::telemetry::TracerRef;
 use crate::traffic::{LangPair, Trace};
@@ -55,6 +56,44 @@ impl PolicyCfg {
 pub enum DeviceKind {
     Npu,
     Gpu,
+}
+
+/// Fault-injection knob for an experiment: a seed-scaled intensity plus
+/// the recovery contract. Intensity `0.0` with the default recovery is
+/// fully inert — runs stay on the fault-free engine path.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultCfg {
+    /// Scales [`FaultPlan::generate`]: ~`intensity` slowdown windows and
+    /// ~`intensity/2` stalls per shard; `>= 1.0` with multiple shards
+    /// additionally kills one shard mid-run.
+    pub intensity: f64,
+    pub recovery: RecoveryPolicy,
+}
+
+impl Default for FaultCfg {
+    fn default() -> Self {
+        FaultCfg {
+            intensity: 0.0,
+            recovery: RecoveryPolicy::default(),
+        }
+    }
+}
+
+impl FaultCfg {
+    /// True when this configuration changes engine behavior at all.
+    pub fn active(&self) -> bool {
+        self.intensity > 0.0 || self.recovery.timeout.is_some() || self.recovery.shed
+    }
+
+    /// The per-seed plan this configuration injects.
+    pub fn plan(&self, shards: usize, duration: Nanos, seed: u64) -> FaultPlan {
+        if !self.active() {
+            return FaultPlan::none();
+        }
+        let mut plan = FaultPlan::generate(self.intensity, shards, duration, seed);
+        plan.recovery = self.recovery;
+        plan
+    }
 }
 
 /// One experiment configuration (a single point of a paper figure).
@@ -92,6 +131,9 @@ pub struct ExpConfig {
     /// per-node scans, no epoch cache). Golden tests pin the optimized
     /// engine byte-identical to this; benches report the speedup over it.
     pub reference: bool,
+    /// Fault injection + recovery. The default ([`FaultCfg::default`]) is
+    /// inert: no faults, no deadline timeouts, no shedding.
+    pub fault: FaultCfg,
 }
 
 impl Default for ExpConfig {
@@ -112,7 +154,37 @@ impl Default for ExpConfig {
             dispatch: DispatchPolicy::JoinShortestQueue,
             steal: StealPolicy::None,
             reference: false,
+            fault: FaultCfg::default(),
         }
+    }
+}
+
+impl ExpConfig {
+    /// Reject configurations the engine would only fail on deep inside a
+    /// run — every error names the CLI flag that carries the bad value.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if !(self.rate.is_finite() && self.rate > 0.0) {
+            anyhow::bail!("--rate must be a positive number (got {})", self.rate);
+        }
+        if self.shards == 0 {
+            anyhow::bail!("--shards must be at least 1 (got 0)");
+        }
+        if self.duration == 0 {
+            anyhow::bail!("--duration must be a positive number of seconds (got 0)");
+        }
+        if self.runs == 0 {
+            anyhow::bail!("--runs must be at least 1 (got 0)");
+        }
+        if self.max_batch == 0 {
+            anyhow::bail!("--max-batch must be at least 1 (got 0)");
+        }
+        if !(self.fault.intensity.is_finite() && self.fault.intensity >= 0.0) {
+            anyhow::bail!(
+                "--fault must be a non-negative number (got {})",
+                self.fault.intensity
+            );
+        }
+        Ok(())
     }
 }
 
@@ -214,8 +286,11 @@ pub fn run_once_traced(
     seed: u64,
     tracer: &TracerRef,
 ) -> RunResult {
-    if cfg.shards > 1 {
-        let tracers: Vec<TracerRef> = (0..cfg.shards).map(|_| tracer.clone()).collect();
+    if cfg.shards > 1 || cfg.fault.active() {
+        // fault injection lives in the sharded front-end (it owns the
+        // recovery bookkeeping), so active faults route there even at
+        // shards == 1
+        let tracers: Vec<TracerRef> = (0..cfg.shards.max(1)).map(|_| tracer.clone()).collect();
         return run_sharded_traced(cfg, table, seed, &tracers).merged;
     }
     let trace = make_trace(cfg, &table, seed);
@@ -235,13 +310,15 @@ pub fn run_sharded_traced(
     tracers: &[TracerRef],
 ) -> ShardRun {
     let trace = make_trace(cfg, &table, seed);
+    let shards = cfg.shards.max(1);
     let engine = ShardedEngine::new(
         vec![table.clone()],
         sim_config(cfg),
-        cfg.shards.max(1),
+        shards,
         cfg.dispatch.reseeded(seed),
     )
-    .with_steal(cfg.steal, cfg.sla, resolved_dec_timesteps(cfg, table.as_ref()));
+    .with_steal(cfg.steal, cfg.sla, resolved_dec_timesteps(cfg, table.as_ref()))
+    .with_faults(cfg.fault.plan(shards, cfg.duration, seed));
     engine.run_traced(&trace, |_| make_policy(cfg, table.clone()), tracers)
 }
 
@@ -462,6 +539,88 @@ mod tests {
             serial.to_json(cfg.sla).render(),
             threaded.to_json(cfg.sla).render()
         );
+    }
+
+    #[test]
+    fn validate_names_the_bad_flag() {
+        let ok = ExpConfig::default();
+        assert!(ok.validate().is_ok());
+        let cases: [(ExpConfig, &str); 4] = [
+            (
+                ExpConfig {
+                    rate: 0.0,
+                    ..ExpConfig::default()
+                },
+                "--rate",
+            ),
+            (
+                ExpConfig {
+                    shards: 0,
+                    ..ExpConfig::default()
+                },
+                "--shards",
+            ),
+            (
+                ExpConfig {
+                    duration: 0,
+                    ..ExpConfig::default()
+                },
+                "--duration",
+            ),
+            (
+                ExpConfig {
+                    fault: FaultCfg {
+                        intensity: f64::NAN,
+                        ..FaultCfg::default()
+                    },
+                    ..ExpConfig::default()
+                },
+                "--fault",
+            ),
+        ];
+        for (cfg, flag) in cases {
+            let err = cfg.validate().unwrap_err().to_string();
+            assert!(err.contains(flag), "{err:?} should name {flag}");
+        }
+    }
+
+    #[test]
+    fn inert_fault_cfg_produces_the_empty_plan() {
+        let cfg = FaultCfg::default();
+        assert!(!cfg.active());
+        assert!(cfg.plan(4, SEC, 42).is_none());
+        let active = FaultCfg {
+            intensity: 1.5,
+            ..FaultCfg::default()
+        };
+        assert!(active.active());
+        assert!(!active.plan(4, SEC, 42).is_none());
+    }
+
+    #[test]
+    fn faulted_run_keeps_aggregate_finite_and_deterministic() {
+        let cfg = ExpConfig {
+            workload: Workload::ResNet,
+            policy: PolicyCfg::Lazy,
+            rate: 400.0,
+            duration: SEC / 2,
+            runs: 2,
+            shards: 2,
+            fault: FaultCfg {
+                intensity: 1.0,
+                recovery: RecoveryPolicy {
+                    timeout: Some(200 * MS),
+                    shed: true,
+                    ..RecoveryPolicy::default()
+                },
+            },
+            ..ExpConfig::default()
+        };
+        let a = run(&cfg);
+        let b = run(&cfg);
+        assert_eq!(a.pooled_ns, b.pooled_ns);
+        assert_eq!(a.to_json(cfg.sla).render(), b.to_json(cfg.sla).render());
+        assert!(a.mean_latency_ms().is_finite());
     }
 
     #[test]

@@ -25,12 +25,12 @@
 //! ```
 
 use anyhow::{bail, Result};
-use lazybatching::exp::{self, DeviceKind, ExpConfig, PolicyCfg};
+use lazybatching::exp::{self, DeviceKind, ExpConfig, FaultCfg, PolicyCfg};
 use lazybatching::model::{LatencyTable, Workload, WMT_MEAN_IN, WMT_MEAN_OUT};
 use lazybatching::npu::systolic::SystolicModel;
 #[cfg(feature = "real")]
 use lazybatching::server::{self, ServeConfig, ServePolicy, ServeRequest};
-use lazybatching::sim::{DispatchPolicy, StealPolicy};
+use lazybatching::sim::{DispatchPolicy, RecoveryPolicy, StealPolicy};
 use lazybatching::telemetry::{
     fanout, perfetto, registry::ns_to_ms, JsonlWriter, RecordingTracer, TracerRef,
 };
@@ -75,13 +75,19 @@ fn print_help() {
          \x20          [--rate R] [--sla MS] [--runs N] [--duration S] [--gpu] [--json]\n\
          \x20          [--shards N] [--dispatch <rr|jsq|p2c>]\n\
          \x20          [--steal <none|idle-pull|slack-aware>]\n\
+         \x20          [--fault I] [--fault-timeout MS] [--fault-retries N]\n\
+         \x20          [--fault-backoff MS] [--shed]\n\
          sweep      --workload W [--rates a,b,c] [--sla MS] [--runs N]\n\
          \x20          [--shards N] [--dispatch <rr|jsq|p2c>]\n\
-         \x20          [--steal <none|idle-pull|slack-aware>]\n\
+         \x20          [--steal <none|idle-pull|slack-aware>] [--fault I] [--shed]\n\
          trace      --workload W --policy P [--rate R] [--sla MS] [--duration S]\n\
          \x20          [--seed N] [--out FILE.json] [--limit N] [--trace-cap N]\n\
          \x20          [--trace-out FILE.jsonl] [--shards N] [--dispatch <rr|jsq|p2c>]\n\
          \x20          [--steal <none|idle-pull|slack-aware>]\n\
+         \x20          [--fault I] [--fault-timeout MS] [--fault-retries N]\n\
+         \x20          [--fault-backoff MS] [--shed]\n\
+         \x20          (--fault I injects seed-deterministic slowdown/stall/death\n\
+         \x20           faults at intensity I; recovery re-dispatches revoked work)\n\
          \x20          (Perfetto/chrome://tracing export + per-request timelines;\n\
          \x20           with --shards > 1, one processor track per shard;\n\
          \x20           --trace-out streams every event as JSONL during the run)\n\
@@ -115,6 +121,25 @@ fn parse_steal(args: &Args) -> Result<StealPolicy> {
     })
 }
 
+/// `--fault I` scales the injected fault plan; `--fault-timeout MS`
+/// arms per-request re-dispatch deadlines, `--fault-retries N` bounds
+/// re-dispatches, `--fault-backoff MS` spaces them, and `--shed` turns
+/// on SLA-aware load shedding.
+fn parse_fault(args: &Args) -> Result<FaultCfg> {
+    let mut recovery = RecoveryPolicy::default();
+    let timeout_ms = args.get_u64("fault-timeout", 0)?;
+    if timeout_ms > 0 {
+        recovery.timeout = Some(timeout_ms * MS);
+    }
+    recovery.retry_budget = args.get_u64("fault-retries", recovery.retry_budget as u64)? as u32;
+    recovery.backoff = args.get_u64("fault-backoff", 1)? * MS;
+    recovery.shed = args.flag("shed");
+    Ok(FaultCfg {
+        intensity: args.get_f64("fault", 0.0)?,
+        recovery,
+    })
+}
+
 fn parse_workload(args: &Args) -> Result<Workload> {
     let name = args.get_or("workload", "resnet");
     Workload::from_name(name).ok_or_else(|| {
@@ -143,8 +168,10 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         shards: args.get_usize("shards", 1)?,
         dispatch: parse_dispatch(args)?,
         steal: parse_steal(args)?,
+        fault: parse_fault(args)?,
         ..ExpConfig::default()
     };
+    cfg.validate()?;
     let agg = exp::run(&cfg);
     let (lat_lo, lat_hi) = agg.latency_p25_p75();
     if args.flag("json") {
@@ -157,6 +184,11 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             .set("dispatch", cfg.dispatch.name())
             .set("steal", cfg.steal.name())
             .set("throughput", agg.mean_throughput());
+        let j = if cfg.fault.active() {
+            j.set("fault", cfg.fault.intensity)
+        } else {
+            j
+        };
         println!("{}", j.render());
     } else {
         println!(
@@ -205,8 +237,10 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             shards: args.get_usize("shards", 1)?,
             dispatch: parse_dispatch(args)?,
             steal: parse_steal(args)?,
+            fault: parse_fault(args)?,
             ..ExpConfig::default()
         };
+        base.validate()?;
         let mut policies = vec![PolicyCfg::Serial, PolicyCfg::Lazy, PolicyCfg::Oracle];
         for w in exp::GRAPHB_WINDOWS_MS {
             policies.push(PolicyCfg::GraphB(w));
@@ -243,8 +277,10 @@ fn cmd_trace(args: &Args) -> Result<()> {
         shards: args.get_usize("shards", 1)?,
         dispatch: parse_dispatch(args)?,
         steal: parse_steal(args)?,
+        fault: parse_fault(args)?,
         ..ExpConfig::default()
     };
+    cfg.validate()?;
     let out = args.get_or("out", "trace.json").to_string();
     let seed = args.get_u64("seed", 42)?;
     // --trace-cap bounds each recording ring (drop-oldest); 0 = unbounded

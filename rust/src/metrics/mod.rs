@@ -244,7 +244,7 @@ mod tests {
             s.queue_wait_hist.record(0);
             s.queue_wait_hist.record(0);
         }
-        let merged = crate::sim::merge_runs(&[shard_a, shard_b]);
+        let merged = crate::sim::merge_runs(&[shard_a, shard_b]).unwrap();
         let ids: Vec<u64> = merged.latencies.iter().map(|&(id, _)| id).collect();
         assert_eq!(ids, vec![0, 1, 2, 3]);
         let a = Aggregate::from_runs(&[merged.clone()]);

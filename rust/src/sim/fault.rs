@@ -1,0 +1,462 @@
+//! Deterministic fault injection for the sharded simulator.
+//!
+//! A [`FaultPlan`] is a seed-derived schedule of hardware misbehavior —
+//! per-shard slowdown windows (straggler multipliers on every node
+//! latency sampled while the window is open), stall windows (the NPU
+//! freezes: an in-flight node makes no progress until the window
+//! closes), and shard death (the NPU disappears at time T and never
+//! comes back). The plan is pure data: the sharded event loop in
+//! [`crate::sim::shard`] consults it through [`FaultState`] and reacts —
+//! failover of queued work from a dead shard, deadline timeouts with a
+//! bounded retry budget, and SLA-aware shedding — so the same plan
+//! replays byte-identically under every policy.
+//!
+//! `FaultPlan::none()` is the absence of the subsystem: the engine must
+//! produce byte-identical results to a build that predates this module
+//! (pinned in `tests/golden_engine.rs`).
+
+use crate::util::prng::Prng;
+use crate::{Nanos, MS};
+
+/// One scheduled fault. Times are virtual nanoseconds from run start.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FaultEvent {
+    /// Straggler window: every node execution *issued* on `shard` while
+    /// `start <= t < end` runs `mult_milli/1000`x slower (2500 = 2.5x).
+    /// The multiplier is sampled once at issue time, matching a thermal
+    /// or contention event that inflates the whole kernel.
+    Slowdown {
+        shard: usize,
+        start: Nanos,
+        end: Nanos,
+        mult_milli: u64,
+    },
+    /// Freeze window: the shard makes no execution progress during
+    /// `start <= t < end`. An in-flight node overlapping the window is
+    /// extended by the overlap; the policy timer still fires (the
+    /// coordinator is host-side and stays alive).
+    Stall {
+        shard: usize,
+        start: Nanos,
+        end: Nanos,
+    },
+    /// The shard dies at `at` and never recovers. Queued and unissued
+    /// work is failed over to survivors; an issued-but-unfinished node
+    /// is lost and its requests re-enter dispatch with a retry charged.
+    Death { shard: usize, at: Nanos },
+}
+
+impl FaultEvent {
+    pub fn shard(&self) -> usize {
+        match self {
+            FaultEvent::Slowdown { shard, .. }
+            | FaultEvent::Stall { shard, .. }
+            | FaultEvent::Death { shard, .. } => *shard,
+        }
+    }
+
+    /// Short tag for trace events and human output.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            FaultEvent::Slowdown { .. } => "slowdown",
+            FaultEvent::Stall { .. } => "stall",
+            FaultEvent::Death { .. } => "death",
+        }
+    }
+}
+
+/// How the admission front-end reacts to faults and deadline pressure.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RecoveryPolicy {
+    /// Maximum re-dispatch attempts per request (beyond the first
+    /// dispatch). A request that exhausts the budget is counted
+    /// `timed_out`, never silently dropped.
+    pub retry_budget: u32,
+    /// Sim-time delay before a timed-out or failed-over request
+    /// re-enters dispatch, multiplied by the attempt number.
+    pub backoff: Nanos,
+    /// Per-request deadline measured from dispatch: if the request has
+    /// not *issued its first node* within this window, it is revoked and
+    /// re-dispatched (retry budget permitting). `None` disables the
+    /// timeout.
+    pub timeout: Option<Nanos>,
+    /// SLA-aware load shedding: at each dispatch decision, a request
+    /// whose Eq. 2 slack is already negative (the SLA is unmeetable even
+    /// on an idle shard) is shed immediately and counted, instead of
+    /// being queued to violate silently.
+    pub shed: bool,
+}
+
+impl Default for RecoveryPolicy {
+    fn default() -> Self {
+        RecoveryPolicy {
+            retry_budget: 3,
+            backoff: MS,
+            timeout: None,
+            shed: false,
+        }
+    }
+}
+
+/// A full fault schedule plus the recovery policy to run it under.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+    pub recovery: RecoveryPolicy,
+}
+
+impl FaultPlan {
+    /// The empty plan: no faults, no timeout, no shedding. The engine
+    /// takes the exact pre-fault code path (byte-identical, golden-
+    /// pinned).
+    pub fn none() -> Self {
+        FaultPlan::default()
+    }
+
+    /// True when the plan changes nothing: no scheduled events, no
+    /// deadline timeout, no shedding. Retry budget/backoff alone are
+    /// inert (they only matter once something fails).
+    pub fn is_none(&self) -> bool {
+        self.events.is_empty() && self.recovery.timeout.is_none() && !self.recovery.shed
+    }
+
+    /// Generate a seed-deterministic plan scaled by `intensity`.
+    ///
+    /// `intensity == 0.0` yields the empty plan. Otherwise, per shard:
+    /// ~`intensity` slowdown windows (1.5x–4x, each ~5–20% of the run)
+    /// and ~`intensity/2` stall windows (~1–5% of the run); at
+    /// `intensity >= 1.0` with more than one shard, exactly one shard
+    /// dies in the middle 60% of the run — never all of them, so the
+    /// run can always drain.
+    pub fn generate(intensity: f64, shards: usize, duration: Nanos, seed: u64) -> Self {
+        let mut plan = FaultPlan::none();
+        if intensity <= 0.0 || shards == 0 || duration == 0 {
+            return plan;
+        }
+        let mut rng = Prng::new(seed ^ 0xFA0C7_BADD);
+        let whole = |r: &mut Prng, expected: f64| -> usize {
+            // deterministic rounding: floor + Bernoulli on the fraction
+            let base = expected.floor();
+            let extra = if r.next_f64() < expected - base { 1 } else { 0 };
+            base as usize + extra
+        };
+        for shard in 0..shards {
+            let mut sr = rng.fork(shard as u64 + 1);
+            let n_slow = whole(&mut sr, intensity);
+            for _ in 0..n_slow {
+                let len = duration / 20 + sr.next_range(duration / 7 + 1);
+                let start = sr.next_range(duration.saturating_sub(len).max(1));
+                plan.events.push(FaultEvent::Slowdown {
+                    shard,
+                    start,
+                    end: start + len,
+                    mult_milli: 1500 + sr.next_range(2501), // 1.5x..=4.0x
+                });
+            }
+            let n_stall = whole(&mut sr, intensity / 2.0);
+            for _ in 0..n_stall {
+                let len = duration / 100 + sr.next_range(duration / 25 + 1);
+                let start = sr.next_range(duration.saturating_sub(len).max(1));
+                plan.events.push(FaultEvent::Stall {
+                    shard,
+                    start,
+                    end: start + len,
+                });
+            }
+        }
+        if intensity >= 1.0 && shards > 1 {
+            let victim = rng.next_range(shards as u64) as usize;
+            let at = duration / 5 + rng.next_range(duration * 3 / 5 + 1);
+            plan.events.push(FaultEvent::Death { shard: victim, at });
+        }
+        plan
+    }
+
+    /// Number of shards that die under this plan.
+    pub fn deaths(&self) -> usize {
+        self.events
+            .iter()
+            .filter(|e| matches!(e, FaultEvent::Death { .. }))
+            .count()
+    }
+}
+
+/// Per-run, per-shard view of a [`FaultPlan`], pre-sorted for O(log n)
+/// window lookups on the hot path.
+#[derive(Debug, Clone)]
+pub struct FaultState {
+    /// Per shard: (start, end, mult_milli) slowdown windows, sorted by start.
+    slowdowns: Vec<Vec<(Nanos, Nanos, u64)>>,
+    /// Per shard: (start, end) stall windows, sorted by start.
+    stalls: Vec<Vec<(Nanos, Nanos)>>,
+    /// Per shard: death time, if any.
+    deaths: Vec<Option<Nanos>>,
+}
+
+impl FaultState {
+    pub fn new(plan: &FaultPlan, shards: usize) -> Self {
+        let mut st = FaultState {
+            slowdowns: vec![Vec::new(); shards],
+            stalls: vec![Vec::new(); shards],
+            deaths: vec![None; shards],
+        };
+        for ev in &plan.events {
+            let s = ev.shard();
+            if s >= shards {
+                continue; // plan generated for a wider topology; ignore
+            }
+            match *ev {
+                FaultEvent::Slowdown {
+                    start,
+                    end,
+                    mult_milli,
+                    ..
+                } => {
+                    if end > start && mult_milli > 1000 {
+                        st.slowdowns[s].push((start, end, mult_milli));
+                    }
+                }
+                FaultEvent::Stall { start, end, .. } => {
+                    if end > start {
+                        st.stalls[s].push((start, end));
+                    }
+                }
+                FaultEvent::Death { at, .. } => {
+                    // earliest death wins if the plan lists several
+                    st.deaths[s] = Some(st.deaths[s].map_or(at, |d: Nanos| d.min(at)));
+                }
+            }
+        }
+        for v in &mut st.slowdowns {
+            v.sort_unstable();
+        }
+        for v in &mut st.stalls {
+            v.sort_unstable();
+        }
+        st
+    }
+
+    /// Death time of `shard`, if the plan kills it.
+    pub fn death_of(&self, shard: usize) -> Option<Nanos> {
+        self.deaths[shard]
+    }
+
+    /// Earliest death strictly after `now` on any shard in `alive`.
+    pub fn next_death_after(&self, now: Nanos, alive: &[bool]) -> Option<Nanos> {
+        self.deaths
+            .iter()
+            .zip(alive)
+            .filter_map(|(d, &a)| if a { *d } else { None })
+            .filter(|&d| d > now)
+            .min()
+    }
+
+    /// Straggler multiplier (milli-units, 1000 = 1x) in effect on
+    /// `shard` at instant `t`. Overlapping windows compound is not
+    /// modeled: the largest open multiplier wins.
+    pub fn slowdown_at(&self, shard: usize, t: Nanos) -> u64 {
+        let mut mult = 1000;
+        for &(s, e, m) in &self.slowdowns[shard] {
+            if s > t {
+                break;
+            }
+            if t < e {
+                mult = mult.max(m);
+            }
+        }
+        mult
+    }
+
+    /// Wall(-sim)-clock end time of a node issued on `shard` at `start`
+    /// with fault-free latency `lat`: apply the straggler multiplier
+    /// sampled at issue, then push the end past any stall windows the
+    /// execution overlaps (no progress is made while frozen).
+    pub fn exec_end(&self, shard: usize, start: Nanos, lat: Nanos) -> Nanos {
+        let lat = lat * self.slowdown_at(shard, start) / 1000;
+        let mut end = start + lat.max(1);
+        for &(s, e) in &self.stalls[shard] {
+            if s >= end {
+                break;
+            }
+            if e > start {
+                // the window [max(s,start), e) contributes dead time
+                end += e - s.max(start).min(e);
+            }
+        }
+        end
+    }
+
+    /// True when any shard carries any fault.
+    pub fn any(&self) -> bool {
+        self.deaths.iter().any(Option::is_some)
+            || self.slowdowns.iter().any(|v| !v.is_empty())
+            || self.stalls.iter().any(|v| !v.is_empty())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::SEC;
+
+    #[test]
+    fn none_plan_is_inert() {
+        let p = FaultPlan::none();
+        assert!(p.is_none());
+        assert_eq!(p.deaths(), 0);
+        let st = FaultState::new(&p, 4);
+        assert!(!st.any());
+        assert_eq!(st.slowdown_at(0, 0), 1000);
+        assert_eq!(st.exec_end(2, 100, 50), 150);
+        assert_eq!(st.next_death_after(0, &[true; 4]), None);
+    }
+
+    #[test]
+    fn zero_intensity_generates_nothing() {
+        assert!(FaultPlan::generate(0.0, 4, SEC, 1).is_none());
+        assert!(FaultPlan::generate(-1.0, 4, SEC, 1).is_none());
+    }
+
+    #[test]
+    fn generate_is_seed_deterministic() {
+        let a = FaultPlan::generate(1.5, 4, SEC, 42);
+        let b = FaultPlan::generate(1.5, 4, SEC, 42);
+        assert_eq!(a, b);
+        let c = FaultPlan::generate(1.5, 4, SEC, 43);
+        assert_ne!(a, c, "different seeds must draw different plans");
+        assert!(!a.is_none());
+    }
+
+    #[test]
+    fn generate_kills_at_most_one_shard_and_never_the_only_one() {
+        for seed in 0..50u64 {
+            let single = FaultPlan::generate(2.0, 1, SEC, seed);
+            assert_eq!(single.deaths(), 0, "single shard must survive");
+            let multi = FaultPlan::generate(2.0, 4, SEC, seed);
+            assert_eq!(multi.deaths(), 1, "seed={seed}");
+        }
+        // sub-1.0 intensity never kills
+        for seed in 0..20u64 {
+            assert_eq!(FaultPlan::generate(0.5, 4, SEC, seed).deaths(), 0);
+        }
+    }
+
+    #[test]
+    fn slowdown_window_bounds_and_multiplier() {
+        let plan = FaultPlan {
+            events: vec![FaultEvent::Slowdown {
+                shard: 1,
+                start: 100,
+                end: 200,
+                mult_milli: 2500,
+            }],
+            ..FaultPlan::none()
+        };
+        let st = FaultState::new(&plan, 2);
+        assert_eq!(st.slowdown_at(1, 99), 1000);
+        assert_eq!(st.slowdown_at(1, 100), 2500);
+        assert_eq!(st.slowdown_at(1, 199), 2500);
+        assert_eq!(st.slowdown_at(1, 200), 1000);
+        assert_eq!(st.slowdown_at(0, 150), 1000, "wrong shard untouched");
+        // multiplier applies to the full node issued inside the window
+        assert_eq!(st.exec_end(1, 150, 40), 150 + 100);
+    }
+
+    #[test]
+    fn overlapping_slowdowns_take_the_max() {
+        let plan = FaultPlan {
+            events: vec![
+                FaultEvent::Slowdown {
+                    shard: 0,
+                    start: 0,
+                    end: 100,
+                    mult_milli: 1500,
+                },
+                FaultEvent::Slowdown {
+                    shard: 0,
+                    start: 50,
+                    end: 150,
+                    mult_milli: 3000,
+                },
+            ],
+            ..FaultPlan::none()
+        };
+        let st = FaultState::new(&plan, 1);
+        assert_eq!(st.slowdown_at(0, 25), 1500);
+        assert_eq!(st.slowdown_at(0, 75), 3000);
+        assert_eq!(st.slowdown_at(0, 125), 3000);
+    }
+
+    #[test]
+    fn stall_extends_overlapping_execution() {
+        let plan = FaultPlan {
+            events: vec![FaultEvent::Stall {
+                shard: 0,
+                start: 100,
+                end: 160,
+            }],
+            ..FaultPlan::none()
+        };
+        let st = FaultState::new(&plan, 1);
+        // ends before the window: untouched
+        assert_eq!(st.exec_end(0, 0, 50), 50);
+        // fully spans the window: +60
+        assert_eq!(st.exec_end(0, 80, 100), 240);
+        // issued inside the window: only the remaining freeze counts
+        assert_eq!(st.exec_end(0, 130, 50), 210);
+        // starts after the window: untouched
+        assert_eq!(st.exec_end(0, 160, 50), 210);
+    }
+
+    #[test]
+    fn chained_stalls_accumulate() {
+        let plan = FaultPlan {
+            events: vec![
+                FaultEvent::Stall {
+                    shard: 0,
+                    start: 10,
+                    end: 20,
+                },
+                FaultEvent::Stall {
+                    shard: 0,
+                    start: 30,
+                    end: 50,
+                },
+            ],
+            ..FaultPlan::none()
+        };
+        let st = FaultState::new(&plan, 1);
+        // 0->35 raw execution crosses the first window entirely (+10),
+        // pushing the end to 45, which overlaps the second (+20) -> 65
+        assert_eq!(st.exec_end(0, 0, 35), 65);
+    }
+
+    #[test]
+    fn death_bookkeeping() {
+        let plan = FaultPlan {
+            events: vec![
+                FaultEvent::Death { shard: 2, at: 500 },
+                FaultEvent::Death { shard: 2, at: 300 },
+            ],
+            ..FaultPlan::none()
+        };
+        let st = FaultState::new(&plan, 4);
+        assert_eq!(st.death_of(2), Some(300), "earliest death wins");
+        assert_eq!(st.death_of(0), None);
+        assert_eq!(st.next_death_after(0, &[true; 4]), Some(300));
+        assert_eq!(st.next_death_after(300, &[true; 4]), None);
+        let mut alive = [true; 4];
+        alive[2] = false;
+        assert_eq!(st.next_death_after(0, &alive), None);
+    }
+
+    #[test]
+    fn out_of_range_shard_events_are_ignored() {
+        let plan = FaultPlan {
+            events: vec![FaultEvent::Death { shard: 9, at: 10 }],
+            ..FaultPlan::none()
+        };
+        let st = FaultState::new(&plan, 2);
+        assert!(!st.any());
+    }
+}

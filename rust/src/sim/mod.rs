@@ -13,7 +13,12 @@
 //! optional cross-shard work stealing ([`StealPolicy`]).
 
 pub mod engine;
+pub mod fault;
 pub mod shard;
 
 pub use engine::{RunResult, SimConfig, SimEngine};
-pub use shard::{merge_runs, DispatchPolicy, Migration, ShardRun, ShardedEngine, StealPolicy};
+pub use fault::{FaultEvent, FaultPlan, FaultState, RecoveryPolicy};
+pub use shard::{
+    merge_runs, DispatchPolicy, MergeError, Migration, ShardRun, ShardedEngine, StealPolicy,
+    UNASSIGNED,
+};

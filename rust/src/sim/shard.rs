@@ -30,6 +30,8 @@
 //! every recorded event, so per-shard Perfetto streams join naturally on
 //! request tracks.
 
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 use std::sync::{Arc, Mutex};
 
 use crate::coordinator::policy::{
@@ -37,10 +39,16 @@ use crate::coordinator::policy::{
 };
 use crate::coordinator::{queued_slack, SlackPredictor};
 use crate::sim::engine::{RunResult, SimEngine};
+use crate::sim::fault::{FaultEvent, FaultPlan, FaultState};
 use crate::telemetry::{self, Event, Histogram, Tracer, TracerRef};
 use crate::traffic::{RequestSpec, Trace};
 use crate::util::Prng;
 use crate::{Nanos, MS};
+
+/// Sentinel shard index in [`ShardRun::assignment`] for requests that
+/// never reached a shard (shed at admission, or arriving after the whole
+/// fleet died). Only fault-injected runs produce it.
+pub const UNASSIGNED: usize = usize::MAX;
 
 /// How the admission front-end routes an arriving request to a shard.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -220,6 +228,67 @@ impl Dispatcher {
             }
         }
     }
+
+    /// [`Dispatcher::pick`] restricted to live shards, for the
+    /// fault-aware loop. With every shard alive this delegates to `pick`
+    /// (identical RNG draws, identical choices); after a death, the same
+    /// policies run over the surviving subset. Panics if no shard is
+    /// alive — the caller must shed or time out instead of dispatching.
+    fn pick_alive(&mut self, cores: &[ShardCore<'_>]) -> usize {
+        let n = cores.len();
+        if cores.iter().all(|c| !c.dead) {
+            return self.pick(cores);
+        }
+        let alive: Vec<usize> = (0..n).filter(|&i| !cores[i].dead).collect();
+        let k = alive.len();
+        assert!(k > 0, "dispatch with zero live shards");
+        let key = |i: usize| (cores[i].in_flight(), cores[i].busy_end().unwrap_or(0));
+        match self.policy {
+            DispatchPolicy::RoundRobin => {
+                // keep rotating over the full ring, skipping dead slots,
+                // so survivors retain their relative rotation order
+                loop {
+                    let s = self.rr_next % n;
+                    self.rr_next = (self.rr_next + 1) % n;
+                    if !cores[s].dead {
+                        return s;
+                    }
+                }
+            }
+            DispatchPolicy::JoinShortestQueue => {
+                let start = self.tie_rot % k;
+                self.tie_rot = self.tie_rot.wrapping_add(1);
+                (0..k)
+                    .map(|off| alive[(start + off) % k])
+                    .min_by_key(|&i| key(i))
+                    .unwrap()
+            }
+            DispatchPolicy::P2C { .. } => {
+                if k == 1 {
+                    return alive[0];
+                }
+                let ai = self.rng.next_range(k as u64) as usize;
+                let mut bi = self.rng.next_range(k as u64 - 1) as usize;
+                if bi >= ai {
+                    bi += 1;
+                }
+                let (a, b) = (alive[ai], alive[bi]);
+                let (ka, kb) = (key(a), key(b));
+                if kb < ka {
+                    b
+                } else if ka < kb {
+                    a
+                } else {
+                    self.tie_rot = self.tie_rot.wrapping_add(1);
+                    if self.tie_rot & 1 == 0 {
+                        a.min(b)
+                    } else {
+                        a.max(b)
+                    }
+                }
+            }
+        }
+    }
 }
 
 /// Rewrites shard-local request ids to global trace ids on every event
@@ -257,7 +326,8 @@ impl Tracer for RemapTracer {
             match &mut ev {
                 Event::Arrival { req, .. }
                 | Event::Release { req, .. }
-                | Event::Migrate { req, .. } => g(req),
+                | Event::Migrate { req, .. }
+                | Event::Retry { req, .. } => g(req),
                 Event::Admitted { reqs, .. } | Event::SlackEstimate { reqs, .. } => {
                     reqs.iter_mut().for_each(g)
                 }
@@ -270,10 +340,14 @@ impl Tracer for RemapTracer {
                     admitted.iter_mut().for_each(g);
                 }
                 Event::NodeExec { members, .. } => members.iter_mut().for_each(g),
+                // Fault and Shed are emitted by the front-end directly on
+                // the raw per-shard tracers, already in global ids.
                 Event::RunStart { .. }
                 | Event::Denied { .. }
                 | Event::Merge { .. }
-                | Event::Stall { .. } => {}
+                | Event::Stall { .. }
+                | Event::Fault { .. }
+                | Event::Shed { .. } => {}
             }
         }
         self.inner.record(ev);
@@ -296,6 +370,14 @@ pub(crate) struct ShardCore<'e> {
     busy: Option<(Exec, Nanos, Nanos)>, // (exec, start, end)
     timer: Option<Nanos>,
     now: Nanos,
+    /// Set when the fault plan kills this shard: the processor halts,
+    /// and the front-end stops routing here.
+    dead: bool,
+    /// `(this shard's index, fault schedule)` when fault injection is
+    /// active; node end times then route through [`FaultState::exec_end`]
+    /// (straggler multipliers + stall freezes). `None` on the fault-free
+    /// path — byte-identical to the pre-fault engine.
+    fault: Option<(usize, Arc<FaultState>)>,
     released: usize,
     /// Local slots tombstoned by a steal: still in `globals`/`reqs` (ids
     /// are dense) but no longer live on this shard.
@@ -334,6 +416,8 @@ impl<'e> ShardCore<'e> {
             busy: None,
             timer: None,
             now: 0,
+            dead: false,
+            fault: None,
             released: 0,
             revoked: 0,
             stolen_in: 0,
@@ -428,8 +512,9 @@ impl<'e> ShardCore<'e> {
         n
     }
 
-    /// Admit one request routed here by the front-end.
-    fn inject(&mut self, spec: RequestSpec) {
+    /// Admit one request routed here by the front-end. Returns the local
+    /// id the request lives under on this shard.
+    fn inject(&mut self, spec: RequestSpec) -> ReqId {
         self.check_clock(spec.arrival);
         let local = self.globals.len() as ReqId;
         self.globals.push(spec.id);
@@ -446,6 +531,7 @@ impl<'e> ShardCore<'e> {
             });
         }
         self.policy.on_arrival(spec.arrival, &self.reqs, local);
+        local
     }
 
     /// Fire the policy timer due at `t`.
@@ -489,8 +575,38 @@ impl<'e> ShardCore<'e> {
         st.released = true;
         let spec = RequestSpec { id: global, ..st.spec };
         self.revoked += 1;
-        self.stolen_out += 1;
         Some(spec)
+    }
+
+    /// The shard dies at `t`: the processor halts (an in-flight node and
+    /// its partial progress are lost), the policy is abandoned, and every
+    /// live request is drained for the front-end to re-dispatch. Returns
+    /// `(spec, issued)` pairs in local-id order — spec carries the global
+    /// id and the *original* arrival; `issued` marks requests that had
+    /// already started executing (a re-dispatch restarts them from node
+    /// 0 on the new shard).
+    fn kill(&mut self, t: Nanos) -> Vec<(RequestSpec, bool)> {
+        self.check_clock(t);
+        self.dead = true;
+        if let Some((_exec, start, _end)) = self.busy.take() {
+            // the device genuinely worked until the moment it died
+            self.busy_total += t - start;
+        }
+        self.timer = None;
+        let mut drained = Vec::new();
+        for local in 0..self.globals.len() as ReqId {
+            let global = self.globals[local as usize];
+            let st = self.reqs.get_mut(local);
+            if st.released {
+                continue; // completed, or tombstoned by an earlier revoke
+            }
+            let issued = st.first_issue.is_some();
+            st.done = true;
+            st.released = true;
+            self.revoked += 1;
+            drained.push((RequestSpec { id: global, ..st.spec }, issued));
+        }
+        drained
     }
 
     /// Re-admit a request stolen from shard `from`: it gets a fresh local
@@ -503,7 +619,7 @@ impl<'e> ShardCore<'e> {
         from: usize,
         to: usize,
         slack: i64,
-    ) {
+    ) -> ReqId {
         self.check_clock(now);
         let local = self.globals.len() as ReqId;
         self.globals.push(spec.id);
@@ -521,6 +637,30 @@ impl<'e> ShardCore<'e> {
             });
         }
         self.policy.on_arrival(now, &self.reqs, local);
+        local
+    }
+
+    /// Re-admit a request after a deadline revocation or a shard-death
+    /// failover: fresh local id, *original* arrival preserved (latency
+    /// and slack keep charging the time already lost). Emits
+    /// [`Event::Retry`] on this shard's stream.
+    fn inject_retry(&mut self, spec: RequestSpec, now: Nanos, attempt: u32, shard: usize) -> ReqId {
+        self.check_clock(now);
+        let local = self.globals.len() as ReqId;
+        self.globals.push(spec.id);
+        self.remap.push(spec.id);
+        let local_spec = RequestSpec { id: local, ..spec };
+        self.reqs.insert(local_spec);
+        if self.tracer.enabled() {
+            self.tracer.record(Event::Retry {
+                t: now,
+                req: local,
+                attempt,
+                to_shard: shard,
+            });
+        }
+        self.policy.on_arrival(now, &self.reqs, local);
+        local
     }
 
     /// Consult the policy while the processor is idle — the same
@@ -529,7 +669,7 @@ impl<'e> ShardCore<'e> {
     /// the consultation is skipped (every shipped policy returns a
     /// stateless `Sleep` in that situation).
     fn pump(&mut self, t: Nanos) {
-        if self.busy.is_some() || self.in_flight() == 0 {
+        if self.dead || self.busy.is_some() || self.in_flight() == 0 {
             return;
         }
         match self.policy.next_action(t, &self.reqs) {
@@ -545,7 +685,11 @@ impl<'e> ShardCore<'e> {
                 }
                 self.node_execs += 1;
                 self.batch_size_hist.record(exec.reqs.len() as u64);
-                self.busy = Some((exec, t, t + lat.max(1)));
+                let end = match &self.fault {
+                    Some((idx, fs)) => fs.exec_end(*idx, t, lat),
+                    None => t + lat.max(1),
+                };
+                self.busy = Some((exec, t, end));
             }
             Action::Sleep { until } => {
                 if let Some(u) = until {
@@ -606,6 +750,14 @@ pub struct ShardRun {
     /// Every cross-shard steal performed during the run, in occurrence
     /// order (global ids; empty unless a [`StealPolicy`] moved work).
     pub migrations: Vec<Migration>,
+    /// Requests denied at admission because their Eq. 2 slack was already
+    /// unrecoverable (`(global id, shed instant)`). Only fault-injected
+    /// runs with [`crate::sim::RecoveryPolicy::shed`] produce these.
+    pub shed: Vec<(ReqId, Nanos)>,
+    /// Requests abandoned after exhausting their retry budget (deadline
+    /// timeouts, repeated shard deaths, or a fully dead fleet) —
+    /// `(global id, abandon instant)`. Empty on fault-free runs.
+    pub timed_out: Vec<(ReqId, Nanos)>,
 }
 
 impl ShardRun {
@@ -628,11 +780,15 @@ impl ShardRun {
             / (self.per_shard.len() as f64 * self.merged.makespan as f64)
     }
 
-    /// Requests routed to each shard.
+    /// Requests routed to each shard. Requests that never reached one
+    /// ([`UNASSIGNED`]: shed at admission, or arrived to a dead fleet)
+    /// are not counted anywhere.
     pub fn per_shard_requests(&self) -> Vec<usize> {
         let mut counts = vec![0usize; self.per_shard.len()];
         for &s in &self.assignment {
-            counts[s] += 1;
+            if s < counts.len() {
+                counts[s] += 1;
+            }
         }
         counts
     }
@@ -648,13 +804,43 @@ impl ShardRun {
     }
 }
 
+/// A shard-merge invariant violation: the per-shard results do not form
+/// a partition of the request set. Always checked (not just under
+/// `debug_assertions`) — a silent merge corruption here would miscount
+/// latencies in every downstream aggregate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MergeError {
+    /// The same global request id was released by two shards.
+    DuplicateId(ReqId),
+    /// Queue-wait histogram samples don't match the released-request
+    /// count — per-shard accounting dropped or double-counted samples.
+    HistogramMismatch { samples: u64, released: u64 },
+}
+
+impl std::fmt::Display for MergeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MergeError::DuplicateId(id) => {
+                write!(f, "request id {id} released by more than one shard")
+            }
+            MergeError::HistogramMismatch { samples, released } => write!(
+                f,
+                "queue-wait histogram holds {samples} samples for {released} released requests"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for MergeError {}
+
 /// Merge per-shard results into one aggregate [`RunResult`].
 ///
 /// Merged latencies are sorted by global request id (deterministic and
 /// order-insensitive for every downstream consumer); histograms and
 /// policy counters are summed, `max_batch_formed` is the max across
-/// shards.
-pub fn merge_runs(per_shard: &[RunResult]) -> RunResult {
+/// shards. Returns a [`MergeError`] if the shards do not partition the
+/// request set (duplicate id, or histogram-count drift).
+pub fn merge_runs(per_shard: &[RunResult]) -> Result<RunResult, MergeError> {
     assert!(!per_shard.is_empty(), "merge of zero shards");
     let total: usize = per_shard.iter().map(|r| r.latencies.len()).sum();
     let mut latencies = Vec::with_capacity(total);
@@ -682,20 +868,20 @@ pub fn merge_runs(per_shard: &[RunResult]) -> RunResult {
         batch_size_hist.merge(&r.batch_size_hist);
     }
     latencies.sort_unstable_by_key(|&(id, _)| id);
-    // shard-merge invariants (exercised by the CI debug-assertions pass):
-    // the shards partition the request set — no id may appear twice, and
-    // every released request must survive the merge.
-    debug_assert!(
-        latencies.windows(2).all(|w| w[0].0 < w[1].0),
-        "duplicate request id across shards"
-    );
+    // shard-merge invariants, always on: the shards partition the request
+    // set — no id may appear twice, and every released request must
+    // survive the merge with its queue-wait sample.
+    if let Some(w) = latencies.windows(2).find(|w| w[0].0 >= w[1].0) {
+        return Err(MergeError::DuplicateId(w[1].0));
+    }
     assert_eq!(latencies.len(), total, "released requests lost in merge");
-    debug_assert_eq!(
-        queue_wait_hist.count(),
-        total as u64,
-        "queue-wait samples lost in merge"
-    );
-    RunResult {
+    if queue_wait_hist.count() != total as u64 {
+        return Err(MergeError::HistogramMismatch {
+            samples: queue_wait_hist.count(),
+            released: total as u64,
+        });
+    }
+    Ok(RunResult {
         latencies,
         makespan,
         busy,
@@ -703,7 +889,7 @@ pub fn merge_runs(per_shard: &[RunResult]) -> RunResult {
         stats,
         queue_wait_hist,
         batch_size_hist,
-    }
+    })
 }
 
 /// N per-NPU simulations behind one admission front-end.
@@ -716,6 +902,10 @@ pub struct ShardedEngine {
     sla: Nanos,
     /// Decoder-unroll bound for the queued-slack estimate.
     dec_timesteps: usize,
+    /// Injected faults and the recovery contract. [`FaultPlan::none`]
+    /// keeps the run on the untouched fault-free loop (byte-identical to
+    /// the pre-fault engine, pinned by the golden tests).
+    fault: FaultPlan,
 }
 
 impl ShardedEngine {
@@ -740,7 +930,19 @@ impl ShardedEngine {
             steal: StealPolicy::None,
             sla: 100 * MS,
             dec_timesteps: SlackPredictor::default_dec_timesteps(dyn_graph),
+            fault: FaultPlan::none(),
         }
+    }
+
+    /// Inject `plan` into every run. A [`FaultPlan::none`] plan (the
+    /// default) keeps the engine on the fault-free loop.
+    pub fn with_faults(mut self, plan: FaultPlan) -> ShardedEngine {
+        self.fault = plan;
+        self
+    }
+
+    pub fn fault(&self) -> &FaultPlan {
+        &self.fault
     }
 
     /// Enable work stealing. `sla` and `dec_timesteps` parameterize the
@@ -798,6 +1000,9 @@ impl ShardedEngine {
             self.shards,
             "need exactly one tracer per shard"
         );
+        if !self.fault.is_none() {
+            return self.run_chaos(trace, mk_policy, tracers);
+        }
         let total = trace.requests.len();
         let mut cores: Vec<ShardCore<'_>> = (0..self.shards)
             .map(|i| ShardCore::new(&self.engine, mk_policy(i), tracers[i].clone()))
@@ -854,12 +1059,13 @@ impl ShardedEngine {
             // 4) once the instant settles, idle shards pull queued work
             //    from loaded neighbors (no-op under StealPolicy::None).
             if self.steal != StealPolicy::None && self.shards > 1 {
-                self.steal_pass(&mut cores, t, &mut migrations);
+                self.steal_pass(&mut cores, t, &mut migrations, None);
             }
         }
 
         let per_shard: Vec<RunResult> = cores.into_iter().map(ShardCore::finish).collect();
-        let merged = merge_runs(&per_shard);
+        let merged =
+            merge_runs(&per_shard).unwrap_or_else(|e| panic!("shard merge corrupted: {e}"));
         assert_eq!(
             merged.latencies.len(),
             total,
@@ -871,6 +1077,8 @@ impl ShardedEngine {
             per_shard,
             assignment,
             migrations,
+            shed: Vec::new(),
+            timed_out: Vec::new(),
         };
         // migration invariant (CI debug-assertions pass): every stolen
         // request was released by the shard that finally held it — on
@@ -891,6 +1099,306 @@ impl ShardedEngine {
             }
         }
         run
+    }
+
+    /// The fault-injected event loop: [`ShardedEngine::run_traced`] plus
+    /// the recovery contract. Structure mirrors the fault-free loop —
+    /// same same-instant ordering (completions → arrivals → timers →
+    /// steal) — with three extra event sources interleaved: scheduled
+    /// shard deaths (drain and re-dispatch), armed per-request deadlines
+    /// (revoke and retry, bounded by the retry budget), and due retries
+    /// (re-dispatch to a surviving shard).
+    ///
+    /// Accounting invariant, always asserted: every admitted request is
+    /// released, shed, or timed out — never silently lost.
+    fn run_chaos(
+        &self,
+        trace: &Trace,
+        mut mk_policy: impl FnMut(usize) -> Box<dyn Batcher>,
+        tracers: &[TracerRef],
+    ) -> ShardRun {
+        let total = trace.requests.len();
+        let rec = self.fault.recovery;
+        let fs = Arc::new(FaultState::new(&self.fault, self.shards));
+        let mut cores: Vec<ShardCore<'_>> = (0..self.shards)
+            .map(|i| {
+                let mut c = ShardCore::new(&self.engine, mk_policy(i), tracers[i].clone());
+                c.fault = Some((i, fs.clone()));
+                c
+            })
+            .collect();
+        // announce the scheduled degradation windows up front (deaths are
+        // emitted at kill time, when they actually take effect)
+        for ev in &self.fault.events {
+            if let FaultEvent::Slowdown { shard, start, end, .. }
+            | FaultEvent::Stall { shard, start, end } = ev
+            {
+                if *shard < self.shards && tracers[*shard].enabled() {
+                    tracers[*shard].record(Event::Fault {
+                        t: *start,
+                        shard: *shard,
+                        fault: ev.kind(),
+                        dur: end - start,
+                    });
+                }
+            }
+        }
+        let mut dispatcher = Dispatcher::new(self.dispatch);
+        let mut assignment: Vec<usize> = Vec::with_capacity(total);
+        let mut migrations: Vec<Migration> = Vec::new();
+        // per-global-id recovery bookkeeping
+        let mut loc: Vec<(usize, ReqId)> = Vec::with_capacity(total);
+        let mut attempts: Vec<u32> = Vec::with_capacity(total);
+        // staleness guard for armed deadlines: bumped whenever a request
+        // is revoked, drained, or re-dispatched (NOT on a steal — a steal
+        // moves the request without restarting its deadline)
+        let mut epoch: Vec<u32> = Vec::with_capacity(total);
+        let mut deadlines: BinaryHeap<Reverse<(Nanos, ReqId, u32)>> = BinaryHeap::new();
+        let mut retries: BinaryHeap<Reverse<(Nanos, ReqId)>> = BinaryHeap::new();
+        let mut deaths_remaining: Vec<Option<Nanos>> =
+            (0..self.shards).map(|i| fs.death_of(i)).collect();
+        let mut shed: Vec<(ReqId, Nanos)> = Vec::new();
+        let mut timed_out: Vec<(ReqId, Nanos)> = Vec::new();
+        let mut n_retries = 0u64;
+        let mut n_failovers = 0u64;
+        let mut n_deaths = 0u64;
+        let mut next_arrival = 0usize;
+        let mut released_total = 0usize;
+        // requests resolved without a release (shed or timed out)
+        let mut resolved = 0usize;
+
+        // a request that fails recovery charges its budget and either
+        // backs off into the retry queue or is abandoned
+        let charge =
+            |g: ReqId, t: Nanos, attempts: &mut [u32], timed_out: &mut Vec<(ReqId, Nanos)>,
+             retries: &mut BinaryHeap<Reverse<(Nanos, ReqId)>>, resolved: &mut usize| {
+                attempts[g as usize] += 1;
+                if attempts[g as usize] > rec.retry_budget {
+                    timed_out.push((g, t));
+                    *resolved += 1;
+                } else {
+                    let delay = rec.backoff * attempts[g as usize] as Nanos;
+                    retries.push(Reverse((t + delay, g)));
+                }
+            };
+
+        while released_total + resolved < total {
+            let t_arr = trace.requests.get(next_arrival).map(|r| r.arrival);
+            let t_int = cores.iter().filter_map(|c| c.next_event()).min();
+            let t_death = deaths_remaining.iter().flatten().min().copied();
+            let t_dead = deadlines.peek().map(|&Reverse((d, _, _))| d);
+            let t_retry = retries.peek().map(|&Reverse((r, _))| r);
+            let Some(t) = [t_int, t_arr, t_death, t_dead, t_retry]
+                .into_iter()
+                .flatten()
+                .min()
+            else {
+                panic!(
+                    "policy stalled under faults: {} of {total} requests unresolved, \
+                     no pending events",
+                    total - released_total - resolved
+                );
+            };
+
+            // 1) completions free processors first,
+            for core in &mut cores {
+                if core.busy_end() == Some(t) {
+                    released_total += core.on_completion(t);
+                    core.pump(t);
+                }
+            }
+            // 2) scheduled shard deaths drain their live requests,
+            for i in 0..self.shards {
+                let Some(d) = deaths_remaining[i] else { continue };
+                if d > t {
+                    continue;
+                }
+                deaths_remaining[i] = None;
+                n_deaths += 1;
+                if tracers[i].enabled() {
+                    tracers[i].record(Event::Fault {
+                        t,
+                        shard: i,
+                        fault: "death",
+                        dur: 0,
+                    });
+                }
+                for (spec, issued) in cores[i].kill(t) {
+                    let g = spec.id;
+                    epoch[g as usize] += 1;
+                    if issued {
+                        // partial execution lost with the device: a
+                        // restart charges the retry budget and backs off
+                        charge(g, t, &mut attempts, &mut timed_out, &mut retries, &mut resolved);
+                    } else {
+                        // failover of never-issued work is free: the
+                        // request merely waits for re-dispatch
+                        n_failovers += 1;
+                        retries.push(Reverse((t, g)));
+                    }
+                }
+            }
+            // 3) due deadlines revoke still-queued requests for retry,
+            while let Some(&Reverse((d, g, e))) = deadlines.peek() {
+                if d > t {
+                    break;
+                }
+                deadlines.pop();
+                if epoch[g as usize] != e {
+                    continue; // stale: re-dispatched since this was armed
+                }
+                let (s, local) = loc[g as usize];
+                if s >= cores.len() || cores[s].dead {
+                    continue; // already drained by the death path
+                }
+                // issued or completed requests ride to release — only
+                // still-queued work can be revoked and re-dispatched
+                if cores[s].revoke(local).is_none() {
+                    continue;
+                }
+                epoch[g as usize] += 1;
+                charge(g, t, &mut attempts, &mut timed_out, &mut retries, &mut resolved);
+                cores[s].pump(t);
+            }
+            // 4) arrivals are routed on the post-completion state,
+            while next_arrival < total && trace.requests[next_arrival].arrival == t {
+                let spec = trace.requests[next_arrival];
+                next_arrival += 1;
+                let g = spec.id;
+                debug_assert_eq!(g as usize, loc.len());
+                attempts.push(0);
+                epoch.push(0);
+                if cores.iter().all(|c| c.dead) {
+                    assignment.push(UNASSIGNED);
+                    loc.push((UNASSIGNED, 0));
+                    timed_out.push((g, t));
+                    resolved += 1;
+                    continue;
+                }
+                if rec.shed {
+                    let slack = self.shed_slack(t, &spec);
+                    if slack < 0 {
+                        assignment.push(UNASSIGNED);
+                        loc.push((UNASSIGNED, 0));
+                        shed.push((g, t));
+                        resolved += 1;
+                        if tracers[0].enabled() {
+                            tracers[0].record(Event::Shed { t, req: g, slack });
+                        }
+                        continue;
+                    }
+                }
+                let s = dispatcher.pick_alive(&cores);
+                assignment.push(s);
+                let local = cores[s].inject(spec);
+                loc.push((s, local));
+                if let Some(w) = rec.timeout {
+                    deadlines.push(Reverse((t + w, g, 0)));
+                }
+                cores[s].pump(t);
+            }
+            // 5) due retries re-dispatch to a surviving shard,
+            while let Some(&Reverse((r, g))) = retries.peek() {
+                if r > t {
+                    break;
+                }
+                retries.pop();
+                let spec = trace.requests[g as usize];
+                debug_assert_eq!(spec.id, g);
+                if cores.iter().all(|c| c.dead) {
+                    timed_out.push((g, t));
+                    resolved += 1;
+                    continue;
+                }
+                if rec.shed {
+                    let slack = self.shed_slack(t, &spec);
+                    if slack < 0 {
+                        shed.push((g, t));
+                        resolved += 1;
+                        if tracers[0].enabled() {
+                            tracers[0].record(Event::Shed { t, req: g, slack });
+                        }
+                        continue;
+                    }
+                }
+                let s = dispatcher.pick_alive(&cores);
+                let local = cores[s].inject_retry(spec, t, attempts[g as usize], s);
+                loc[g as usize] = (s, local);
+                epoch[g as usize] += 1;
+                n_retries += 1;
+                if let Some(w) = rec.timeout {
+                    deadlines.push(Reverse((t + w, g, epoch[g as usize])));
+                }
+                cores[s].pump(t);
+            }
+            // 6) timers fire last,
+            for core in &mut cores {
+                if core.timer == Some(t) {
+                    core.on_timer(t);
+                    core.pump(t);
+                }
+            }
+            // 7) then idle survivors pull queued work from loaded peers.
+            if self.steal != StealPolicy::None && self.shards > 1 {
+                self.steal_pass(&mut cores, t, &mut migrations, Some(&mut loc));
+            }
+        }
+
+        // every local slot must be accounted for on its shard: released,
+        // or tombstoned by a revoke/drain
+        for (i, core) in cores.iter().enumerate() {
+            assert_eq!(
+                core.globals.len(),
+                core.released + core.revoked,
+                "shard {i} leaked local requests"
+            );
+        }
+        let per_shard: Vec<RunResult> = cores.into_iter().map(ShardCore::finish).collect();
+        let mut merged =
+            merge_runs(&per_shard).unwrap_or_else(|e| panic!("shard merge corrupted: {e}"));
+        // the no-lost-requests invariant, always on: completed + shed +
+        // timed-out partitions the admitted set
+        assert_eq!(
+            merged.latencies.len() + shed.len() + timed_out.len(),
+            total,
+            "chaos run lost requests: {} released + {} shed + {} timed out != {total}",
+            merged.latencies.len(),
+            shed.len(),
+            timed_out.len()
+        );
+        debug_assert_eq!(assignment.len(), total);
+        merged.stats.bump("offered", total as u64);
+        for (name, v) in [
+            ("shed", shed.len() as u64),
+            ("timed_out", timed_out.len() as u64),
+            ("retries", n_retries),
+            ("failovers", n_failovers),
+            ("shard_deaths", n_deaths),
+        ] {
+            if v > 0 {
+                merged.stats.bump(name, v);
+            }
+        }
+        ShardRun {
+            merged,
+            per_shard,
+            assignment,
+            migrations,
+            shed,
+            timed_out,
+        }
+    }
+
+    /// Eq. 2 queued slack of an arriving (or retrying) request — the
+    /// load-shedding criterion: below zero, no schedule can make its SLA.
+    fn shed_slack(&self, now: Nanos, spec: &RequestSpec) -> i64 {
+        queued_slack(
+            &self.engine.tables[spec.model_idx],
+            self.sla,
+            self.dec_timesteps,
+            now,
+            spec,
+        )
     }
 
     /// Predicted remaining slack of a request queued on `core` (Eq. 2
@@ -918,17 +1426,18 @@ impl ShardedEngine {
         cores: &mut [ShardCore<'_>],
         now: Nanos,
         migrations: &mut Vec<Migration>,
+        mut loc: Option<&mut Vec<(usize, ReqId)>>,
     ) {
         let n = cores.len();
         for thief in 0..n {
-            if cores[thief].in_flight() > 0 {
+            if cores[thief].dead || cores[thief].in_flight() > 0 {
                 continue;
             }
             // victim: deepest revocable queue (ties → lowest index)
             let mut victim = 0usize;
             let mut best_depth = 0usize;
             for (v, core) in cores.iter().enumerate() {
-                if v == thief {
+                if v == thief || core.dead {
                     continue;
                 }
                 let d = core.revocable_len();
@@ -953,6 +1462,7 @@ impl ShardedEngine {
                 let Some(spec) = cores[victim].revoke(local) else {
                     continue;
                 };
+                cores[victim].stolen_out += 1;
                 migrations.push(Migration {
                     req: spec.id,
                     from: victim,
@@ -960,7 +1470,12 @@ impl ShardedEngine {
                     t: now,
                     slack,
                 });
-                cores[thief].inject_migrated(spec, now, victim, thief, slack);
+                let new_local = cores[thief].inject_migrated(spec, now, victim, thief, slack);
+                // a steal moves a request, it doesn't restart it: armed
+                // deadlines stay valid, so only the location is updated
+                if let Some(loc) = loc.as_deref_mut() {
+                    loc[spec.id as usize] = (thief, new_local);
+                }
             }
             cores[thief].pump(now);
         }
@@ -1548,12 +2063,226 @@ mod tests {
             queue_wait_hist: Histogram::queue_wait(),
             batch_size_hist: Histogram::batch_size(),
         };
-        let merged = merge_runs(&[real.clone(), empty]);
+        let merged = merge_runs(&[real.clone(), empty]).unwrap();
         assert_eq!(merged.latencies, real.latencies);
         assert_eq!(merged.node_execs, real.node_execs);
         assert_eq!(merged.makespan, real.makespan);
         assert_eq!(merged.busy, real.busy);
         assert_eq!(merged.queue_wait_hist.count(), real.queue_wait_hist.count());
         assert_eq!(merged.batch_size_hist.count(), real.batch_size_hist.count());
+    }
+
+    // ---- merge invariants (always-on checked errors) ----
+
+    fn mk_result(ids: &[ReqId]) -> RunResult {
+        let mut queue_wait_hist = Histogram::queue_wait();
+        for _ in ids {
+            queue_wait_hist.record(0);
+        }
+        RunResult {
+            latencies: ids.iter().map(|&id| (id, 5 * MS)).collect(),
+            makespan: 10,
+            busy: 5,
+            node_execs: 1,
+            stats: PolicyStats::default(),
+            queue_wait_hist,
+            batch_size_hist: Histogram::batch_size(),
+        }
+    }
+
+    #[test]
+    fn merge_rejects_duplicate_ids_across_shards() {
+        assert!(merge_runs(&[mk_result(&[0, 1]), mk_result(&[2])]).is_ok());
+        let err = merge_runs(&[mk_result(&[0, 1]), mk_result(&[1])]).unwrap_err();
+        assert_eq!(err, MergeError::DuplicateId(1));
+        assert!(err.to_string().contains('1'), "{err}");
+    }
+
+    #[test]
+    fn merge_rejects_histogram_sample_drift() {
+        let mut drift = mk_result(&[2]);
+        drift.queue_wait_hist.record(0); // one sample too many
+        match merge_runs(&[mk_result(&[0, 1]), drift]).unwrap_err() {
+            MergeError::HistogramMismatch { samples, released } => {
+                assert_eq!((samples, released), (4, 3));
+            }
+            other => panic!("expected HistogramMismatch, got {other:?}"),
+        }
+    }
+
+    // ---- revocation edge cases ----
+
+    #[test]
+    fn revoke_refuses_issued_and_completed_requests() {
+        let t = table(Workload::Gnmt);
+        let engine = crate::sim::SimEngine::single(t.clone(), SimConfig::default());
+        let mut core = ShardCore::new(&engine, mk_policy("serial", &t), telemetry::noop());
+        let local = core.inject(steal_spec(7, 2));
+        core.pump(0);
+        // serial issues immediately: in-flight work is not revocable
+        assert!(core.busy.is_some());
+        assert!(core.revoke(local).is_none());
+        // drive the request to completion, node by node
+        let mut guard = 0;
+        while core.released == 0 {
+            let end = core.busy_end().expect("engine stalled mid-request");
+            core.on_completion(end);
+            core.pump(core.now);
+            guard += 1;
+            assert!(guard < 10_000, "request never completed");
+        }
+        // completed-and-released: revoke must refuse, not double-resolve
+        assert!(core.revoke(local).is_none());
+        assert_eq!((core.released, core.revoked), (1, 0));
+    }
+
+    #[test]
+    fn revoke_tombstones_once_and_refuses_double_revocation() {
+        let t = table(Workload::Gnmt);
+        let engine = crate::sim::SimEngine::single(t.clone(), SimConfig::default());
+        let mut core = ShardCore::new(&engine, mk_policy("lazy", &t), telemetry::noop());
+        let a = core.inject(steal_spec(0, 4));
+        core.pump(0); // `a` issues
+        let b = core.inject(RequestSpec {
+            id: 1,
+            arrival: 1,
+            in_len: 4,
+            out_len: 4,
+            model_idx: 0,
+        });
+        assert_eq!(core.revocable(), vec![b]);
+        let spec = core.revoke(b).expect("queued request must be revocable");
+        assert_eq!(spec.id, 1, "revoke restores the global id");
+        assert_eq!(spec.arrival, 1, "revoke preserves the original arrival");
+        assert_eq!(core.revoked, 1);
+        // the tombstoned slot no longer counts as live or revocable
+        assert_eq!(core.in_flight(), 1);
+        assert!(core.revoke(b).is_none(), "double revoke must refuse");
+        assert!(core.revoke(a).is_none(), "issued request must refuse");
+    }
+
+    #[test]
+    fn final_assignment_last_hop_wins_after_chained_migrations() {
+        let mut run = run_crafted(vec![steal_spec(0, 2)], StealPolicy::None);
+        assert_eq!(run.assignment, vec![0]);
+        run.migrations = vec![
+            Migration {
+                req: 0,
+                from: 0,
+                to: 1,
+                t: 10,
+                slack: 0,
+            },
+            Migration {
+                req: 0,
+                from: 1,
+                to: 0,
+                t: 20,
+                slack: 0,
+            },
+        ];
+        assert_eq!(run.final_assignment(), vec![0], "round trip lands home");
+        run.migrations.push(Migration {
+            req: 0,
+            from: 0,
+            to: 1,
+            t: 30,
+            slack: 0,
+        });
+        assert_eq!(run.final_assignment(), vec![1], "last hop wins");
+    }
+
+    // ---- fault injection ----
+
+    #[test]
+    fn chaos_loop_with_inert_plan_matches_the_fault_free_loop() {
+        // run_chaos with the empty plan must be a no-op wrapper around
+        // identical execution — same latencies, routing, everything
+        let t = table(Workload::Gnmt);
+        let trace = Trace::generate(&t.graph, 500.0, SEC / 2, 42);
+        let mk_engine = || {
+            ShardedEngine::new(
+                vec![t.clone()],
+                SimConfig::default(),
+                2,
+                DispatchPolicy::JoinShortestQueue,
+            )
+        };
+        let normal = mk_engine().run(&trace, |_| mk_policy("lazy", &t));
+        let tracers: Vec<TracerRef> = (0..2).map(|_| telemetry::noop()).collect();
+        let chaos = mk_engine().run_chaos(&trace, |_| mk_policy("lazy", &t), &tracers);
+        assert_eq!(chaos.merged.latencies, normal.merged.latencies);
+        assert_eq!(chaos.assignment, normal.assignment);
+        assert_eq!(chaos.merged.node_execs, normal.merged.node_execs);
+        assert_eq!(chaos.merged.busy, normal.merged.busy);
+        assert!(chaos.shed.is_empty() && chaos.timed_out.is_empty());
+        for (x, y) in chaos.per_shard.iter().zip(&normal.per_shard) {
+            assert_eq!(x.latencies, y.latencies);
+        }
+        // the only counter difference: the chaos loop reports offered load
+        assert_eq!(
+            chaos.merged.stats.extra_counter("offered"),
+            trace.requests.len() as u64
+        );
+    }
+
+    #[test]
+    fn shard_death_fails_over_queued_and_restarts_issued_work() {
+        // rr over 2 shards: ids 0/2 land on shard 0 (0 issues, 2 queues),
+        // ids 1/3 on shard 1. Shard 0 dies at t=1: id 0 restarts (budget
+        // charged), id 2 fails over free — all four must complete on the
+        // survivor, nothing lost
+        let t = table(Workload::Gnmt);
+        let trace = Trace {
+            requests: vec![
+                steal_spec(0, 8),
+                steal_spec(1, 2),
+                steal_spec(2, 8),
+                steal_spec(3, 2),
+            ],
+            rate_per_sec: 0.0,
+            duration: SEC,
+        };
+        let plan = FaultPlan {
+            events: vec![FaultEvent::Death { shard: 0, at: 1 }],
+            recovery: crate::sim::RecoveryPolicy::default(),
+        };
+        let engine = ShardedEngine::new(
+            vec![t.clone()],
+            SimConfig::default(),
+            2,
+            DispatchPolicy::RoundRobin,
+        )
+        .with_faults(plan);
+        let recs: Vec<Arc<RecordingTracer>> = (0..2).map(|_| RecordingTracer::new()).collect();
+        let tracers: Vec<TracerRef> = recs.iter().map(|r| r.clone() as TracerRef).collect();
+        let run = engine.run_traced(&trace, |_| mk_policy("serial", &t), &tracers);
+        assert_eq!(run.merged.latencies.len(), 4, "no request may be lost");
+        assert!(run.shed.is_empty() && run.timed_out.is_empty());
+        assert_eq!(run.merged.stats.extra_counter("shard_deaths"), 1);
+        assert_eq!(run.merged.stats.extra_counter("retries"), 2);
+        assert_eq!(run.merged.stats.extra_counter("failovers"), 1);
+        // the dead shard's stream carries the death marker...
+        let dead_events = recs[0].take();
+        assert!(dead_events
+            .iter()
+            .any(|e| matches!(e, Event::Fault { fault: "death", shard: 0, .. })));
+        // ...and the survivor's stream carries both re-dispatches, in
+        // global ids
+        let surv = recs[1].take();
+        let retried: Vec<ReqId> = surv
+            .iter()
+            .filter_map(|e| match e {
+                Event::Retry { req, .. } => Some(*req),
+                _ => None,
+            })
+            .collect();
+        assert!(
+            retried.contains(&0) && retried.contains(&2),
+            "expected ids 0 and 2 re-dispatched, got {retried:?}"
+        );
+        // every request released exactly once, by the survivor
+        assert_eq!(run.per_shard[0].latencies.len(), 0);
+        assert_eq!(run.per_shard[1].latencies.len(), 4);
     }
 }

@@ -114,6 +114,28 @@ pub enum Event {
         to_shard: usize,
         slack: i64,
     },
+    /// An injected hardware fault took effect on `shard`: a slowdown or
+    /// stall window opened (`dur` = window length) or the shard died
+    /// (`dur` = 0). `fault` is the [`crate::sim::FaultEvent::kind`] tag.
+    Fault {
+        t: Nanos,
+        shard: usize,
+        fault: &'static str,
+        dur: Nanos,
+    },
+    /// A request was revoked (deadline timeout or shard death) and
+    /// re-dispatched. `attempt` counts re-dispatches (first retry = 1);
+    /// `to_shard` is the new home.
+    Retry {
+        t: Nanos,
+        req: ReqId,
+        attempt: u32,
+        to_shard: usize,
+    },
+    /// The admission front-end refused to queue a request whose Eq. 2
+    /// slack was already unrecoverable (`slack` < 0 at decision time).
+    /// Shed requests are counted — never silently lost.
+    Shed { t: Nanos, req: ReqId, slack: i64 },
 }
 
 impl Event {
@@ -129,7 +151,10 @@ impl Event {
             | Event::Preempt { t, .. }
             | Event::Stall { t, .. }
             | Event::Release { t, .. }
-            | Event::Migrate { t, .. } => *t,
+            | Event::Migrate { t, .. }
+            | Event::Fault { t, .. }
+            | Event::Retry { t, .. }
+            | Event::Shed { t, .. } => *t,
             Event::NodeExec { start, .. } => *start,
         }
     }
@@ -148,6 +173,9 @@ impl Event {
             Event::NodeExec { .. } => "node_exec",
             Event::Release { .. } => "release",
             Event::Migrate { .. } => "migrate",
+            Event::Fault { .. } => "fault",
+            Event::Retry { .. } => "retry",
+            Event::Shed { .. } => "shed",
         }
     }
 }
@@ -184,6 +212,29 @@ mod tests {
         };
         assert_eq!(m.timestamp(), 55);
         assert_eq!(m.kind(), "migrate");
+        let f = Event::Fault {
+            t: 77,
+            shard: 1,
+            fault: "stall",
+            dur: 1000,
+        };
+        assert_eq!(f.timestamp(), 77);
+        assert_eq!(f.kind(), "fault");
+        let r = Event::Retry {
+            t: 88,
+            req: 4,
+            attempt: 2,
+            to_shard: 0,
+        };
+        assert_eq!(r.timestamp(), 88);
+        assert_eq!(r.kind(), "retry");
+        let s = Event::Shed {
+            t: 91,
+            req: 5,
+            slack: -12,
+        };
+        assert_eq!(s.timestamp(), 91);
+        assert_eq!(s.kind(), "shed");
     }
 
     #[test]

@@ -121,6 +121,29 @@ pub fn event_json(ev: &Event) -> Json {
             .set("from_shard", *from_shard)
             .set("to_shard", *to_shard)
             .set("slack", *slack),
+        Event::Fault {
+            t,
+            shard,
+            fault,
+            dur,
+        } => j
+            .set("t", *t)
+            .set("shard", *shard)
+            .set("fault", *fault)
+            .set("dur", *dur),
+        Event::Retry {
+            t,
+            req,
+            attempt,
+            to_shard,
+        } => j
+            .set("t", *t)
+            .set("req", *req)
+            .set("attempt", *attempt as u64)
+            .set("to_shard", *to_shard),
+        Event::Shed { t, req, slack } => {
+            j.set("t", *t).set("req", *req).set("slack", *slack)
+        }
     }
 }
 
@@ -134,6 +157,7 @@ pub fn event_json(ev: &Event) -> Json {
 pub struct JsonlWriter {
     out: Mutex<BufWriter<Box<dyn Write + Send>>>,
     written: AtomicU64,
+    errors: AtomicU64,
 }
 
 impl JsonlWriter {
@@ -148,12 +172,21 @@ impl JsonlWriter {
         Arc::new(JsonlWriter {
             out: Mutex::new(BufWriter::new(w)),
             written: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
         })
     }
 
     /// Lines successfully written so far.
     pub fn lines_written(&self) -> u64 {
         self.written.load(Ordering::Relaxed)
+    }
+
+    /// Sink write failures observed so far. After the first failure the
+    /// writer stops attempting further lines (a dead disk must not turn
+    /// every event into a syscall + error), so a non-zero value means
+    /// the stream is truncated at `lines_written()` lines.
+    pub fn write_errors(&self) -> u64 {
+        self.errors.load(Ordering::Relaxed)
     }
 
     /// Flush buffered lines to the underlying sink.
@@ -168,12 +201,17 @@ impl Tracer for JsonlWriter {
     }
 
     fn record(&self, ev: Event) {
+        // an export error must not kill the run: count it, stop writing,
+        // and let `write_errors()`/`lines_written()` expose the shortfall
+        if self.errors.load(Ordering::Relaxed) > 0 {
+            return;
+        }
         let line = event_json(&ev).render();
         let mut out = self.out.lock().unwrap();
-        // an export error must not kill the run; the line count makes the
-        // shortfall visible to whoever checks it
         if writeln!(out, "{line}").is_ok() {
             self.written.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.errors.fetch_add(1, Ordering::Relaxed);
         }
     }
 }
@@ -305,6 +343,23 @@ mod tests {
                 to_shard: 2,
                 slack: -3,
             },
+            Event::Fault {
+                t: 12,
+                shard: 1,
+                fault: "slowdown",
+                dur: 500,
+            },
+            Event::Retry {
+                t: 13,
+                req: 2,
+                attempt: 1,
+                to_shard: 0,
+            },
+            Event::Shed {
+                t: 14,
+                req: 3,
+                slack: -44,
+            },
         ];
         for ev in &events {
             let line = event_json(ev).render();
@@ -320,6 +375,63 @@ mod tests {
         assert!(mig.contains(r#""slack":-3"#), "{mig}");
         let se = event_json(&events[4]).render();
         assert!(se.contains(r#""predicted_slack":-12"#), "{se}");
+        let shed = event_json(&events[13]).render();
+        assert_eq!(shed, r#"{"kind":"shed","t":14,"req":3,"slack":-44}"#);
+        let fault = event_json(&events[11]).render();
+        assert_eq!(
+            fault,
+            r#"{"kind":"fault","t":12,"shard":1,"fault":"slowdown","dur":500}"#
+        );
+        let retry = event_json(&events[12]).render();
+        assert_eq!(
+            retry,
+            r#"{"kind":"retry","t":13,"req":2,"attempt":1,"to_shard":0}"#
+        );
+    }
+
+    /// A sink that accepts `good_for` bytes and then fails every write.
+    struct FailingSink {
+        left: usize,
+    }
+
+    impl Write for FailingSink {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            if self.left == 0 {
+                return Err(io::Error::new(io::ErrorKind::Other, "disk full"));
+            }
+            let n = buf.len().min(self.left);
+            self.left -= n;
+            Ok(n)
+        }
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn sink_failure_counts_and_stops_instead_of_panicking() {
+        let w = JsonlWriter::from_writer(Box::new(FailingSink { left: 256 }));
+        let tracer: TracerRef = w.clone();
+        // push far more than the BufWriter capacity so the failure
+        // surfaces mid-run, not only at flush time
+        for i in 0..4096 {
+            tracer.record(Event::Arrival {
+                t: i,
+                req: i,
+                model: 0,
+                in_len: 64,
+                out_len: 64,
+            });
+        }
+        assert!(w.write_errors() > 0, "sink failure must be counted");
+        assert!(
+            w.lines_written() < 4096,
+            "stream must be truncated, not fabricated"
+        );
+        // stop-on-error: the counter does not keep climbing per event
+        assert_eq!(w.write_errors(), 1);
+        // flush surfaces the underlying error instead of panicking
+        assert!(w.flush().is_err());
     }
 
     #[test]

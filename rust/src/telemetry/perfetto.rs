@@ -356,6 +356,47 @@ fn stream_rows(
                 rows.push(instant(pid_proc, 0, "steal", "decision", *t, args.clone()));
                 rows.push(instant(pid_requests, *req, "migrate", "lifecycle", *t, args));
             }
+            Event::Fault {
+                t,
+                shard,
+                fault,
+                dur,
+            } => {
+                // the fault lands on the processor track of the stream it
+                // was recorded on; `shard` disambiguates shared sinks
+                rows.push(instant(
+                    pid_proc,
+                    0,
+                    fault,
+                    "fault",
+                    *t,
+                    Json::obj().set("shard", *shard).set("dur_ns", *dur),
+                ));
+            }
+            Event::Retry {
+                t,
+                req,
+                attempt,
+                to_shard,
+            } => {
+                request_ids.push(*req);
+                let args = Json::obj()
+                    .set("req", *req)
+                    .set("attempt", *attempt as u64)
+                    .set("to_shard", *to_shard);
+                rows.push(instant(pid_proc, 0, "retry", "decision", *t, args.clone()));
+                rows.push(instant(pid_requests, *req, "retry", "lifecycle", *t, args));
+            }
+            Event::Shed { t, req, slack } => {
+                rows.push(instant(
+                    pid_proc,
+                    0,
+                    "shed",
+                    "decision",
+                    *t,
+                    Json::obj().set("req", *req).set("slack_ns", *slack),
+                ));
+            }
             Event::Release {
                 t,
                 req,
@@ -407,6 +448,8 @@ pub struct RequestTimeline {
     pub preempted: u32,
     /// Cross-shard migrations (work-stealing hops) the request made.
     pub migrations: u32,
+    /// Fault-recovery re-dispatches (timeout or shard-death retries).
+    pub retries: u32,
 }
 
 /// Reduce an event stream to one summary row per request (arrival order).
@@ -427,6 +470,7 @@ pub fn request_timelines(events: &[Event]) -> Vec<RequestTimeline> {
                 max_batch: 0,
                 preempted: 0,
                 migrations: 0,
+                retries: 0,
             }),
             Event::NodeExec { members, .. } => {
                 for &id in members {
@@ -446,6 +490,11 @@ pub fn request_timelines(events: &[Event]) -> Vec<RequestTimeline> {
             Event::Migrate { req, .. } => {
                 if let Some(i) = find(&mut rows, *req) {
                     rows[i].migrations += 1;
+                }
+            }
+            Event::Retry { req, .. } => {
+                if let Some(i) = find(&mut rows, *req) {
+                    rows[i].retries += 1;
                 }
             }
             Event::Release {

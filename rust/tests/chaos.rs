@@ -1,0 +1,334 @@
+//! Fault-injection integration tests: the no-lost-requests accounting
+//! invariant under every chaos scenario, recovery semantics (failover,
+//! deadline retry, shedding), and chaos determinism.
+//!
+//! The invariant under test, end to end: for every admitted request,
+//! `released + shed + timed_out == offered` — per shard and merged — no
+//! matter what the fault plan does to the fleet.
+
+use std::sync::Arc;
+
+use lazybatching::coordinator::{Batcher, GraphBatching, LazyBatching, Serial, SlackMode};
+use lazybatching::model::{LatencyTable, Workload};
+use lazybatching::npu::systolic::SystolicModel;
+use lazybatching::sim::{
+    DispatchPolicy, FaultEvent, FaultPlan, RecoveryPolicy, ShardRun, ShardedEngine, SimConfig,
+    StealPolicy, UNASSIGNED,
+};
+use lazybatching::traffic::{RequestSpec, Trace};
+use lazybatching::{MS, SEC};
+
+fn table(w: Workload) -> Arc<LatencyTable> {
+    Arc::new(LatencyTable::profile(
+        Arc::new(w.graph()),
+        &SystolicModel::default_npu(),
+        64,
+    ))
+}
+
+fn mk_policy(kind: &'static str, t: &Arc<LatencyTable>) -> Box<dyn Batcher> {
+    match kind {
+        "serial" => Box::new(Serial::new()),
+        "lazy" => Box::new(LazyBatching::with_defaults(
+            t.clone(),
+            100 * MS,
+            SlackMode::Conservative,
+        )),
+        "graphb" => Box::new(GraphBatching::new(t.graph.clone(), 35 * MS, 64)),
+        _ => unreachable!(),
+    }
+}
+
+fn spec(id: u64, arrival: u64, len: usize) -> RequestSpec {
+    RequestSpec {
+        id,
+        arrival,
+        in_len: len,
+        out_len: len,
+        model_idx: 0,
+    }
+}
+
+/// Assert the accounting invariant on a finished run, merged and per
+/// shard: every admitted request is released, shed, or timed out.
+fn assert_accounted(run: &ShardRun, total: usize, label: &str) {
+    assert_eq!(
+        run.merged.latencies.len() + run.shed.len() + run.timed_out.len(),
+        total,
+        "{label}: lost requests ({} released + {} shed + {} timed out != {total})",
+        run.merged.latencies.len(),
+        run.shed.len(),
+        run.timed_out.len()
+    );
+    // released ids are unique and disjoint from shed/timed-out ids
+    let mut seen = vec![0u8; total];
+    for &(id, _) in &run.merged.latencies {
+        seen[id as usize] += 1;
+    }
+    for &(id, _) in run.shed.iter().chain(&run.timed_out) {
+        seen[id as usize] += 1;
+    }
+    assert!(
+        seen.iter().all(|&c| c == 1),
+        "{label}: some request resolved twice or never"
+    );
+    // routing stayed in range (UNASSIGNED only for shed/dead-fleet)
+    assert_eq!(run.assignment.len(), total, "{label}");
+    assert!(run
+        .assignment
+        .iter()
+        .all(|&s| s < run.per_shard.len() || s == UNASSIGNED));
+}
+
+#[test]
+fn accounting_invariant_holds_across_intensities_policies_and_steal() {
+    let t = table(Workload::Gnmt);
+    let trace = Trace::generate(&t.graph, 600.0, SEC / 2, 42);
+    let total = trace.requests.len();
+    for kind in ["serial", "lazy", "graphb"] {
+        for intensity in [0.5, 1.0, 2.0] {
+            for steal in [StealPolicy::None, StealPolicy::SlackAware] {
+                let mut plan = FaultPlan::generate(intensity, 2, SEC / 2, 0xC0FFEE);
+                plan.recovery = RecoveryPolicy {
+                    retry_budget: 3,
+                    backoff: MS,
+                    timeout: Some(200 * MS),
+                    shed: true,
+                };
+                let engine = ShardedEngine::new(
+                    vec![t.clone()],
+                    SimConfig::default(),
+                    2,
+                    DispatchPolicy::JoinShortestQueue,
+                )
+                .with_steal(steal, 100 * MS, 32)
+                .with_faults(plan);
+                let run = engine.run(&trace, |_| mk_policy(kind, &t));
+                assert_accounted(&run, total, &format!("{kind}/{intensity}/{steal:?}"));
+                assert_eq!(run.merged.stats.extra_counter("offered"), total as u64);
+            }
+        }
+    }
+}
+
+#[test]
+fn chaos_runs_are_deterministic() {
+    let t = table(Workload::Gnmt);
+    let trace = Trace::generate(&t.graph, 800.0, SEC / 2, 7);
+    let run_once = || {
+        let mut plan = FaultPlan::generate(2.0, 4, SEC / 2, 99);
+        plan.recovery = RecoveryPolicy {
+            retry_budget: 2,
+            backoff: MS,
+            timeout: Some(150 * MS),
+            shed: true,
+        };
+        ShardedEngine::new(
+            vec![t.clone()],
+            SimConfig::default(),
+            4,
+            DispatchPolicy::P2C { seed: 3 },
+        )
+        .with_steal(StealPolicy::SlackAware, 100 * MS, 32)
+        .with_faults(plan)
+        .run(&trace, |_| mk_policy("lazy", &t))
+    };
+    let a = run_once();
+    let b = run_once();
+    assert_eq!(a.merged.latencies, b.merged.latencies);
+    assert_eq!(a.shed, b.shed);
+    assert_eq!(a.timed_out, b.timed_out);
+    assert_eq!(a.assignment, b.assignment);
+    assert_eq!(a.migrations, b.migrations);
+    assert_eq!(a.merged.stats.extra, b.merged.stats.extra);
+}
+
+#[test]
+fn stalled_shard_deadlines_revoke_then_exhaust_the_retry_budget() {
+    // one shard, frozen for 50 ms from t=0: the head request issues (and
+    // rides out the stall), the four queued behind it are revoked on
+    // their 5 ms deadlines, bounce back to the same (only) shard, and
+    // exhaust the budget — timed out, never lost, head still released
+    let t = table(Workload::Gnmt);
+    let trace = Trace {
+        requests: (0..5).map(|i| spec(i, 0, 4)).collect(),
+        rate_per_sec: 0.0,
+        duration: SEC,
+    };
+    let plan = FaultPlan {
+        events: vec![FaultEvent::Stall {
+            shard: 0,
+            start: 0,
+            end: 50 * MS,
+        }],
+        recovery: RecoveryPolicy {
+            retry_budget: 3,
+            backoff: MS,
+            timeout: Some(5 * MS),
+            shed: false,
+        },
+    };
+    let engine = ShardedEngine::new(
+        vec![t.clone()],
+        SimConfig::default(),
+        1,
+        DispatchPolicy::RoundRobin,
+    )
+    .with_faults(plan);
+    let run = engine.run(&trace, |_| mk_policy("serial", &t));
+    assert_accounted(&run, 5, "stall+deadline");
+    // the issued head is never revoked by a deadline; serial queues the
+    // rest, which time out well inside the 50 ms freeze
+    assert_eq!(run.merged.latencies.len(), 1, "{:?}", run.timed_out);
+    assert_eq!(run.merged.latencies[0].0, 0, "the issued head survives");
+    assert_eq!(run.timed_out.len(), 4);
+    assert!(run.merged.latencies[0].1 >= 50 * MS, "stall must extend the head");
+    assert_eq!(run.merged.stats.extra_counter("timed_out"), 4);
+    // each timed-out request burned its full budget of re-dispatches
+    assert_eq!(run.merged.stats.extra_counter("retries"), 4 * 3);
+}
+
+#[test]
+fn shedding_denies_unrecoverable_requests_instead_of_queueing_them() {
+    // a 10 µs SLA no GNMT request can meet: with shed on, admission
+    // denies everything up front — counted, never queued, never lost
+    let t = table(Workload::Gnmt);
+    let trace = Trace {
+        requests: (0..8).map(|i| spec(i, i * 1000, 8)).collect(),
+        rate_per_sec: 0.0,
+        duration: SEC,
+    };
+    let plan = FaultPlan {
+        events: vec![],
+        recovery: RecoveryPolicy {
+            shed: true,
+            ..RecoveryPolicy::default()
+        },
+    };
+    let engine = ShardedEngine::new(
+        vec![t.clone()],
+        SimConfig::default(),
+        1,
+        DispatchPolicy::RoundRobin,
+    )
+    .with_steal(StealPolicy::None, MS / 100, 32) // 10 µs SLA for the shed rule
+    .with_faults(plan);
+    let run = engine.run(&trace, |_| mk_policy("lazy", &t));
+    assert_accounted(&run, 8, "shed-all");
+    assert_eq!(run.shed.len(), 8);
+    assert!(run.merged.latencies.is_empty());
+    assert!(run.assignment.iter().all(|&s| s == UNASSIGNED));
+    // the per-shard view guards the UNASSIGNED sentinel
+    assert_eq!(run.per_shard_requests(), vec![0]);
+    assert_eq!(run.merged.stats.extra_counter("shed"), 8);
+}
+
+#[test]
+fn slowdown_inflates_latency_but_loses_nothing() {
+    let t = table(Workload::Gnmt);
+    let trace = Trace::generate(&t.graph, 300.0, SEC / 2, 13);
+    let total = trace.requests.len();
+    let mk_engine = |plan: FaultPlan| {
+        ShardedEngine::new(
+            vec![t.clone()],
+            SimConfig::default(),
+            2,
+            DispatchPolicy::JoinShortestQueue,
+        )
+        .with_faults(plan)
+    };
+    let baseline = mk_engine(FaultPlan::none()).run(&trace, |_| mk_policy("serial", &t));
+    let slow_plan = FaultPlan {
+        events: vec![FaultEvent::Slowdown {
+            shard: 0,
+            start: 0,
+            end: SEC,
+            mult_milli: 4000, // 4x for the whole run
+        }],
+        recovery: RecoveryPolicy::default(),
+    };
+    let slowed = mk_engine(slow_plan).run(&trace, |_| mk_policy("serial", &t));
+    assert_eq!(baseline.merged.latencies.len(), total);
+    assert_accounted(&slowed, total, "slowdown");
+    assert_eq!(slowed.merged.latencies.len(), total, "slowdown must not drop work");
+    let mean = |r: &ShardRun| {
+        r.merged.latencies.iter().map(|&(_, l)| l).sum::<u64>() as f64
+            / r.merged.latencies.len() as f64
+    };
+    assert!(
+        mean(&slowed) > mean(&baseline),
+        "a 4x straggler shard must raise mean latency: {} !> {}",
+        mean(&slowed),
+        mean(&baseline)
+    );
+}
+
+#[test]
+fn death_with_survivors_loses_nothing_even_with_stealing_enabled() {
+    let t = table(Workload::Gnmt);
+    let trace = Trace::generate(&t.graph, 800.0, SEC / 2, 21);
+    let total = trace.requests.len();
+    let plan = FaultPlan {
+        events: vec![FaultEvent::Death {
+            shard: 1,
+            at: 40 * MS,
+        }],
+        recovery: RecoveryPolicy::default(),
+    };
+    let engine = ShardedEngine::new(
+        vec![t.clone()],
+        SimConfig::default(),
+        3,
+        DispatchPolicy::RoundRobin,
+    )
+    .with_steal(StealPolicy::SlackAware, 100 * MS, 32)
+    .with_faults(plan);
+    let run = engine.run(&trace, |_| mk_policy("lazy", &t));
+    assert_accounted(&run, total, "death+steal");
+    assert_eq!(run.merged.stats.extra_counter("shard_deaths"), 1);
+    // with two survivors and no deadline, a single death can never
+    // exhaust the retry budget: everything completes, nothing times out
+    assert!(run.timed_out.is_empty(), "{:?}", run.timed_out);
+    assert!(run.shed.is_empty());
+    assert_eq!(run.merged.latencies.len(), total);
+    // the dead shard held work at 40 ms under this load, so recovery
+    // actually exercised both paths (failover of queued + retry of issued)
+    let recovered = run.merged.stats.extra_counter("failovers")
+        + run.merged.stats.extra_counter("retries");
+    assert!(recovered > 0, "death at 40 ms should have drained live work");
+}
+
+#[test]
+fn arrivals_after_total_fleet_death_time_out_cleanly() {
+    // every shard dies before the late arrivals: they must be counted
+    // timed_out (dead fleet), not panic or vanish. ResNet's ~1.3 ms
+    // batch-1 latency puts request 0 safely before the 20 ms deaths.
+    let t = table(Workload::ResNet);
+    let trace = Trace {
+        requests: vec![spec(0, 0, 1), spec(1, 30 * MS, 1), spec(2, 31 * MS, 1)],
+        rate_per_sec: 0.0,
+        duration: SEC,
+    };
+    let plan = FaultPlan {
+        events: vec![
+            FaultEvent::Death { shard: 0, at: 20 * MS },
+            FaultEvent::Death { shard: 1, at: 20 * MS },
+        ],
+        recovery: RecoveryPolicy::default(),
+    };
+    let engine = ShardedEngine::new(
+        vec![t.clone()],
+        SimConfig::default(),
+        2,
+        DispatchPolicy::RoundRobin,
+    )
+    .with_faults(plan);
+    let run = engine.run(&trace, |_| mk_policy("serial", &t));
+    assert_accounted(&run, 3, "fleet-death");
+    // id 0 completed long before the deaths; ids 1 and 2 arrived to a
+    // dead fleet
+    assert_eq!(run.merged.latencies.len(), 1);
+    assert_eq!(run.merged.latencies[0].0, 0);
+    assert_eq!(run.timed_out.len(), 2);
+    assert!(run.assignment[1] == UNASSIGNED && run.assignment[2] == UNASSIGNED);
+}

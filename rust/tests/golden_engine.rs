@@ -8,9 +8,9 @@
 //! bypassed) across every workload × policy × dispatch × steal
 //! combination at two seeds, and across worker counts.
 
-use lazybatching::exp::{self, ExpConfig, PolicyCfg};
+use lazybatching::exp::{self, ExpConfig, FaultCfg, PolicyCfg};
 use lazybatching::model::Workload;
-use lazybatching::sim::{DispatchPolicy, StealPolicy};
+use lazybatching::sim::{DispatchPolicy, RecoveryPolicy, StealPolicy};
 use lazybatching::SEC;
 
 const WORKLOADS: [Workload; 2] = [Workload::ResNet, Workload::Gnmt];
@@ -138,6 +138,98 @@ fn golden_across_worker_counts() {
     .to_json(base.sla)
     .render();
     assert_eq!(opt, refr);
+}
+
+#[test]
+fn golden_fault_free_chaos_loop_matches_the_untouched_engine() {
+    // An *active but behaviorally inert* fault config — zero injected
+    // events, a deadline far beyond any completion — forces every run
+    // through the chaos event loop. Apart from the `offered` counter
+    // (which only the chaos path reports), the rendered aggregate must
+    // be byte-identical to the fault-free path across the full
+    // workload × policy × dispatch × steal grid, at 1 and 2 shards.
+    let inert_but_active = FaultCfg {
+        intensity: 0.0,
+        recovery: RecoveryPolicy {
+            timeout: Some(3600 * SEC),
+            ..RecoveryPolicy::default()
+        },
+    };
+    for w in WORKLOADS {
+        for p in POLICIES {
+            for dispatch in [DispatchPolicy::JoinShortestQueue, DispatchPolicy::RoundRobin] {
+                for steal in [StealPolicy::None, StealPolicy::SlackAware] {
+                    for shards in [1usize, 2] {
+                        let cfg = ExpConfig {
+                            workload: w,
+                            policy: p,
+                            rate: 400.0,
+                            duration: SEC / 4,
+                            runs: 1,
+                            seed: SEEDS[0],
+                            shards,
+                            dispatch,
+                            steal,
+                            ..ExpConfig::default()
+                        };
+                        let label = format!(
+                            "{}/{}/{}/{}/shards={shards}",
+                            w.name(),
+                            p.name(),
+                            dispatch.name(),
+                            steal.name()
+                        );
+                        let plain = exp::run(&cfg);
+                        let chaos = exp::run(&ExpConfig {
+                            fault: inert_but_active,
+                            ..cfg.clone()
+                        });
+                        // everything admitted was released — nothing shed
+                        // or abandoned by the inert recovery config
+                        let marker = format!(",\"offered\":{}", plain.pooled_ns.len());
+                        let chaos_str = chaos.to_json(cfg.sla).render();
+                        assert!(
+                            chaos_str.contains(&marker),
+                            "{label}: chaos path dropped requests or lost its \
+                             offered counter ({marker} not in counters)"
+                        );
+                        assert_eq!(
+                            plain.to_json(cfg.sla).render(),
+                            chaos_str.replacen(&marker, "", 1),
+                            "fault=none must stay byte-identical: {label}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn golden_chaos_rendered_output_is_deterministic() {
+    // the full chaos machinery — generated plan, deaths, deadline
+    // retries, shedding — renders byte-identically run over run
+    let cfg = ExpConfig {
+        workload: Workload::Gnmt,
+        policy: PolicyCfg::Lazy,
+        rate: 500.0,
+        duration: SEC / 4,
+        runs: 2,
+        shards: 2,
+        dispatch: DispatchPolicy::JoinShortestQueue,
+        steal: StealPolicy::SlackAware,
+        fault: FaultCfg {
+            intensity: 1.5,
+            recovery: RecoveryPolicy {
+                retry_budget: 2,
+                timeout: Some(200_000_000),
+                shed: true,
+                ..RecoveryPolicy::default()
+            },
+        },
+        ..ExpConfig::default()
+    };
+    assert_eq!(rendered(&cfg), rendered(&cfg), "chaos run not deterministic");
 }
 
 #[test]
